@@ -1,0 +1,43 @@
+"""MARS design-point ablations (beyond the paper's single configuration).
+
+The paper fixes RequestQ=512, PhyPageList=128x2-way and reports one point.
+These ablations justify (or challenge) that design point under our
+reproduction: sweep each structure while holding the rest at paper values,
+measure mean bandwidth uplift over WL1-WL5.
+
+Emits ``name,us_per_call,derived`` rows; derived = mean BW uplift.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dram, experiment, mars, streams
+
+RPC = 128  # keep each point cheap; trends match rpc=256
+
+
+def _uplift(mars_cfg) -> float:
+    res = experiment.run_all(mars_cfg=mars_cfg, reqs_per_core=RPC)
+    return float(np.mean([r.bw_uplift for r in res]))
+
+
+def sweep(emit, name, field, values):
+    for v in values:
+        cfg = mars.MarsConfig(**{field: v})
+        t0 = time.perf_counter()
+        u = _uplift(cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"ablation/{name}/{v}", us, f"bw_uplift={100*u:.1f}%")
+
+
+def run(emit):
+    # lookahead window: the paper's central claim is that 512 >> MC queue
+    sweep(emit, "request_q", "request_q", [64, 128, 256, 512, 1024])
+    # page-tracking capacity and associativity
+    sweep(emit, "page_entries", "page_entries", [32, 64, 128, 256])
+    sweep(emit, "ways", "ways", [1, 2, 4])
+    # boundary concurrency
+    sweep(emit, "n_ports", "n_ports", [1, 2, 8])
+    sweep(emit, "mshr", "mshr_per_core", [4, 16, 64])

@@ -1,0 +1,67 @@
+"""Paper-figure benchmarks: one function per paper artifact.
+
+Fig 2  -> bench_locality      (locality vs window vs core count)
+Fig 7  -> bench_bandwidth     (achieved-BW uplift per workload)
+Fig 8  -> bench_cas_act       (CAS/ACT uplift per workload)
+
+Each emits ``name,us_per_call,derived`` CSV rows (derived = the figure's
+headline quantity).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import experiment, streams
+
+RPC = 256
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_locality(emit) -> None:
+    loc, us = _timed(lambda: experiment.locality_experiment(reqs_per_core=512))
+    for series, vals in loc.items():
+        for w, v in vals.items():
+            emit(f"fig2/locality/{series}/w{w}", us / max(len(loc), 1),
+                 f"{v:.3f}")
+
+
+def _workload_results():
+    return experiment.run_all(reqs_per_core=RPC)
+
+
+def bench_bandwidth(emit, results=None) -> None:
+    if results is None:
+        results, us = _timed(_workload_results)
+    else:
+        us = 0.0
+    for r in results:
+        emit(f"fig7/bw_uplift/{r.name}", us / 5, f"{100 * r.bw_uplift:.2f}%")
+    mean = np.mean([r.bw_uplift for r in results])
+    emit("fig7/bw_uplift/mean", us / 5, f"{100 * mean:.2f}%")
+
+
+def bench_cas_act(emit, results=None) -> None:
+    if results is None:
+        results, us = _timed(_workload_results)
+    else:
+        us = 0.0
+    for r in results:
+        emit(f"fig8/cas_act_uplift/{r.name}", us / 5,
+             f"{100 * r.cas_act_uplift:.2f}%")
+    mean = np.mean([r.cas_act_uplift for r in results])
+    emit("fig8/cas_act_uplift/mean", us / 5, f"{100 * mean:.2f}%")
+
+
+def run(emit) -> None:
+    bench_locality(emit)
+    results, us = _timed(_workload_results)
+    bench_bandwidth(emit, results)
+    bench_cas_act(emit, results)
+    emit("paper/workload_sim_total", us, f"{len(results)}wl")

@@ -1,0 +1,45 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV.  One section per paper
+table/figure plus the TPU-adaptation kernel benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark section name")
+    args = ap.parse_args()
+
+    sections = []
+    from benchmarks import paper_figures
+    sections.append(("paper_figures", paper_figures.run))
+    try:
+        from benchmarks import kernel_benches
+        sections.append(("kernel_benches", kernel_benches.run))
+    except ImportError:
+        pass
+    try:
+        from benchmarks import ablations
+        sections.append(("ablations", ablations.run))
+    except ImportError:
+        pass
+
+    print("name,us_per_call,derived")
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        fn(_emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: the MARS paper result in three calls.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import dram, experiment, mars, streams
+
+# 1. Build a paper workload (WL1: 64 cores, single texture stream) and see
+#    how arbitration destroyed per-stream locality.
+wl = streams.make_workload("WL1", reqs_per_core=128)
+print("locality @512-window  source: %.1f   GPU boundary: %.1f" % (
+    streams.locality(streams.single_cache_stream(reqs_per_core=4096), 512),
+    streams.locality(wl.addr, 512)))
+
+# 2. Run the request stream through the DRAM model, with and without MARS.
+base = dram.simulate(wl.addr, is_write=wl.is_write)
+perm, stats = mars.mars_reorder(wl.addr, np.asarray(wl.source) // 8,
+                                src=np.asarray(wl.source))
+perm = np.asarray(perm)
+with_ = dram.simulate(np.asarray(wl.addr)[perm],
+                      is_write=np.asarray(wl.is_write)[perm])
+
+# 3. The paper's two headline metrics.
+print("bandwidth : %.1f -> %.1f GB/s  (+%.0f%%)" % (
+    base.achieved_gbps, with_.achieved_gbps,
+    100 * (with_.achieved_gbps / base.achieved_gbps - 1)))
+print("CAS/ACT   : %.2f -> %.2f       (+%.0f%%)" % (
+    base.cas_per_act, with_.cas_per_act,
+    100 * (with_.cas_per_act / base.cas_per_act - 1)))
+print("MARS engine: %d boundary-port stalls, %d cycles"
+      % (stats["stall_events"], stats["total_cycles"]))

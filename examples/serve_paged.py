@@ -1,0 +1,37 @@
+"""Batched serving with the MARS request scheduler + paged KV attention.
+
+    PYTHONPATH=src python examples/serve_paged.py
+
+Shows both MARS layers of the serving stack:
+  1. the ONLINE scheduler (software RequestQ) grouping requests by KV
+     prefix block, vs FIFO batching;
+  2. the BULK kernel: paged_attention visiting KV pages in page order
+     (validated against its jnp oracle here).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.launch import serve
+
+# 1. scheduler comparison (runs a real smoke model underneath)
+results = serve.main(["--arch", "qwen1_5_0_5b", "--smoke",
+                      "--requests", "48", "--batch", "8"])
+
+# 2. paged attention kernel demo: decode one token for 4 sequences whose
+#    KV lives in 16-entry pages
+B, H, Hkv, D, page, npages = 4, 8, 2, 64, 16, 6
+ks = jax.random.split(jax.random.key(0), 3)
+q = jax.random.normal(ks[0], (B, H, D))
+kp = jax.random.normal(ks[1], (B * npages, page, Hkv, D))
+vp = jax.random.normal(ks[2], (B * npages, page, Hkv, D))
+pt = jnp.arange(B * npages, dtype=jnp.int32).reshape(B, npages)
+lengths = jnp.asarray([90, 64, 17, 96], jnp.int32)
+out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+ref = paged_attention_ref(q, kp, vp, pt, lengths)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                           atol=2e-4)
+print("[example] paged_attention kernel matches oracle "
+      f"(max err {np.abs(np.asarray(out) - np.asarray(ref)).max():.2e})")

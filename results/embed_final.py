@@ -1,0 +1,38 @@
+"""Embed the final roofline tables into EXPERIMENTS.md (run after sweep)."""
+import io, sys, json
+from contextlib import redirect_stdout
+sys.argv = ['x', 'results/dryrun_final.jsonl']
+sys.path.insert(0, 'src')
+from repro.launch import roofline
+
+def render(mesh):
+    sys.argv = ['x', 'results/dryrun_final.jsonl', '--mesh', mesh]
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline.main()
+    return buf.getvalue()
+
+t1, t2 = render('16x16'), render('2x16x16')
+table1 = '\n'.join(l for l in t1.splitlines() if l.startswith('|'))
+summary = '\n'.join(l for l in t1.splitlines() if not l.startswith('|') and l.strip())
+table2 = '\n'.join(l for l in t2.splitlines() if l.startswith('|'))
+
+section = f"""
+## §Roofline — FINAL (post-§Perf optimizations, corrected accounting)
+
+Single-pod 16×16:
+
+{table1}
+
+Summary: {summary}
+
+Multi-pod 2×16×16:
+
+{table2}
+"""
+s = open('EXPERIMENTS.md').read()
+marker = '## §Roofline — FINAL'
+if marker in s:
+    s = s[:s.index(marker)]
+open('EXPERIMENTS.md', 'w').write(s + section)
+print('embedded final tables')

@@ -1,0 +1,356 @@
+"""MARS engine — cycle-level, hardware-faithful, as a pure ``jax.lax.scan``.
+
+The three hardware structures of the paper map 1:1 onto fixed-size arrays:
+
+  RequestQ       -> rq_* arrays of size Q (payload + intrusive linked list
+                    ``rq_next`` + occupancy bit-vector ``rq_valid``)
+  PhyPageList    -> (NSETS x WAYS) set-associative arrays keyed by physical
+                    page number, each entry holding head/tail RequestQ slots
+  PhyPageOrderQ  -> ring buffer of flat PhyPageList entry ids, FIFO in page
+                    first-arrival order
+
+One scan step == one GPU-boundary cycle.  The boundary has ``n_ports``
+insertion ports (one per shader-core group — Figure 1 of the paper shows
+multiple arbitration paths into the boundary buffer), each attempting one
+insertion per cycle (paper Fig 5); a port whose head request hits a full
+PhyPageList set or a full RequestQ stalls *itself* only, not its siblings.
+One request per cycle is forwarded (paper Fig 6): always from the page that
+holds the oldest buffered request (PhyPageOrderQ FIFO), draining that page
+to exhaustion before moving on.
+
+The scan emits the *original index* of each forwarded request (or -1 on an
+idle cycle); compacting those gives the MARS-reordered permutation that the
+DRAM model consumes.  Everything is jittable; no Python state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streams import PAGE_SHIFT
+
+
+@dataclasses.dataclass(frozen=True)
+class MarsConfig:
+    """Paper Section 4 configuration: 512-entry RequestQ, 128-entry 2-way
+    set-associative PhyPageList."""
+
+    request_q: int = 512
+    page_entries: int = 128
+    ways: int = 2
+    # insertion ports at the GPU boundary (one per shader core group)
+    n_ports: int = 8
+    # max outstanding (buffered) requests per source core: shader cores have
+    # a finite number of L1 MSHRs, which bounds how deep any single stream
+    # can pile into the boundary queue
+    mshr_per_core: int = 16
+
+    @property
+    def nsets(self) -> int:
+        return self.page_entries // self.ways
+
+    @property
+    def order_q(self) -> int:
+        # one PhyPageOrderQ slot per PhyPageList entry suffices (an entry is
+        # pushed exactly once per allocation) -> never overflows.
+        return self.page_entries
+
+
+def _page_set_py(p: int, nsets: int) -> int:
+    """XOR-fold all page bits down to the index width (python mirror)."""
+    k = max(1, (nsets - 1).bit_length())
+    s = p
+    x = p >> k
+    for _ in range(max(1, (31 + k - 1) // k)):
+        s ^= x
+        x >>= k
+    return s % nsets
+
+
+def _page_set(page: jnp.ndarray, nsets: int) -> jnp.ndarray:
+    # XOR-fold ALL page bits down to the index width, as a real SRAM tag
+    # array would (folding only adjacent bits aliases strided allocations)
+    k = max(1, (nsets - 1).bit_length())
+    s = page
+    x = page >> k
+    for _ in range(max(1, (31 + k - 1) // k)):
+        s = s ^ x
+        x = x >> k
+    return s % nsets
+
+
+class _State(NamedTuple):
+    # RequestQ
+    rq_page: jnp.ndarray    # int32[Q]
+    rq_order: jnp.ndarray   # int32[Q] original stream index
+    rq_next: jnp.ndarray    # int32[Q] intrusive list, -1 = tail
+    rq_valid: jnp.ndarray   # bool[Q] occupancy bit-vector
+    # PhyPageList (set-associative)
+    ppl_page: jnp.ndarray   # int32[S, W]
+    ppl_valid: jnp.ndarray  # bool[S, W]
+    ppl_head: jnp.ndarray   # int32[S, W] RequestQ slot
+    ppl_tail: jnp.ndarray   # int32[S, W]
+    # PhyPageOrderQ ring buffer of flat (set*W + way) ids
+    poq: jnp.ndarray        # int32[P]
+    poq_head: jnp.ndarray   # int32
+    poq_len: jnp.ndarray    # int32
+    # per-port input cursors / stats
+    cursors: jnp.ndarray    # int32[n_ports]
+    stalls: jnp.ndarray     # int32 port-stall events
+    inflight: jnp.ndarray   # int32[n_cores] outstanding per source core
+
+
+def _init_state(cfg: MarsConfig, n_cores: int) -> _State:
+    Q, S, W, P = cfg.request_q, cfg.nsets, cfg.ways, cfg.order_q
+    i32 = jnp.int32
+    return _State(
+        rq_page=jnp.zeros(Q, i32), rq_order=jnp.zeros(Q, i32),
+        rq_next=jnp.full(Q, -1, i32), rq_valid=jnp.zeros(Q, bool),
+        ppl_page=jnp.zeros((S, W), i32), ppl_valid=jnp.zeros((S, W), bool),
+        ppl_head=jnp.zeros((S, W), i32), ppl_tail=jnp.zeros((S, W), i32),
+        poq=jnp.zeros(P, i32), poq_head=jnp.zeros((), i32),
+        poq_len=jnp.zeros((), i32),
+        cursors=jnp.zeros(cfg.n_ports, i32), stalls=jnp.zeros((), i32),
+        inflight=jnp.zeros(max(n_cores, 1), i32),
+    )
+
+
+def _insert_port(state: _State, port: int, port_req: jnp.ndarray,
+                 port_len: jnp.ndarray, pages: jnp.ndarray,
+                 src: jnp.ndarray, cfg: MarsConfig) -> _State:
+    """Paper Fig 5: one insertion attempt from one boundary port."""
+    S, W = cfg.nsets, cfg.ways
+    cur = state.cursors[port]
+    plen = port_len[port]
+    core = jnp.maximum(src[jnp.maximum(
+        port_req[port, jnp.minimum(cur, jnp.maximum(plen - 1, 0))], 0)], 0)
+    have_input = (cur < plen) & (state.inflight[core] < cfg.mshr_per_core)
+    # global request index at this port's head
+    g = port_req[port, jnp.minimum(cur, jnp.maximum(plen - 1, 0))]
+    page = pages[jnp.maximum(g, 0)]
+    s = _page_set(page, S)
+
+    set_pages = state.ppl_page[s]          # [W]
+    set_valid = state.ppl_valid[s]         # [W]
+    hit_vec = set_valid & (set_pages == page)
+    hit = jnp.any(hit_vec)
+    hit_way = jnp.argmax(hit_vec)
+
+    free_way_vec = ~set_valid
+    have_free_way = jnp.any(free_way_vec)
+    free_way = jnp.argmax(free_way_vec)
+
+    rq_free_slot = jnp.argmin(state.rq_valid)          # first 0 bit
+    rq_has_free = ~state.rq_valid[rq_free_slot]
+
+    can_hit_insert = have_input & hit & rq_has_free
+    can_miss_insert = have_input & ~hit & have_free_way & rq_has_free
+    do_insert = can_hit_insert | can_miss_insert
+    stall = have_input & ~do_insert
+
+    slot = rq_free_slot
+    way = jnp.where(hit, hit_way, free_way)
+
+    # --- RequestQ write
+    rq_page = state.rq_page.at[slot].set(
+        jnp.where(do_insert, page, state.rq_page[slot]))
+    rq_order = state.rq_order.at[slot].set(
+        jnp.where(do_insert, g, state.rq_order[slot]))
+    rq_next = state.rq_next.at[slot].set(
+        jnp.where(do_insert, -1, state.rq_next[slot]))
+    rq_valid = state.rq_valid.at[slot].set(state.rq_valid[slot] | do_insert)
+
+    # --- link to previous tail on a page hit
+    old_tail = state.ppl_tail[s, way]
+    rq_next = rq_next.at[old_tail].set(
+        jnp.where(can_hit_insert, slot, rq_next[old_tail]))
+
+    # --- PhyPageList update (hit: move tail; miss: allocate entry)
+    ppl_page = state.ppl_page.at[s, way].set(
+        jnp.where(can_miss_insert, page, state.ppl_page[s, way]))
+    ppl_valid = state.ppl_valid.at[s, way].set(
+        state.ppl_valid[s, way] | can_miss_insert)
+    ppl_head = state.ppl_head.at[s, way].set(
+        jnp.where(can_miss_insert, slot, state.ppl_head[s, way]))
+    ppl_tail = state.ppl_tail.at[s, way].set(
+        jnp.where(do_insert, slot, state.ppl_tail[s, way]))
+
+    # --- PhyPageOrderQ push on new page allocation
+    flat = (s * W + way).astype(jnp.int32)
+    tail_pos = (state.poq_head + state.poq_len) % cfg.order_q
+    poq = state.poq.at[tail_pos].set(
+        jnp.where(can_miss_insert, flat, state.poq[tail_pos]))
+    poq_len = state.poq_len + can_miss_insert.astype(jnp.int32)
+
+    return state._replace(
+        rq_page=rq_page, rq_order=rq_order, rq_next=rq_next, rq_valid=rq_valid,
+        ppl_page=ppl_page, ppl_valid=ppl_valid, ppl_head=ppl_head,
+        ppl_tail=ppl_tail, poq=poq, poq_len=poq_len,
+        cursors=state.cursors.at[port].add(do_insert.astype(jnp.int32)),
+        stalls=state.stalls + stall.astype(jnp.int32),
+        inflight=state.inflight.at[core].add(do_insert.astype(jnp.int32)),
+    )
+
+
+def _forward(state: _State, src: jnp.ndarray,
+             cfg: MarsConfig) -> tuple[_State, jnp.ndarray]:
+    """Paper Fig 6: forward the head request of the oldest page this cycle.
+
+    Returns (new_state, emitted original index or -1).
+    """
+    W = cfg.ways
+    have_page = state.poq_len > 0
+    flat = state.poq[state.poq_head % cfg.order_q]
+    s, way = flat // W, flat % W
+
+    head = state.ppl_head[s, way]
+    emit = jnp.where(have_page, state.rq_order[head], -1)
+
+    nxt = state.rq_next[head]
+    exhausted = have_page & (nxt < 0)
+
+    rq_valid = state.rq_valid.at[head].set(
+        jnp.where(have_page, False, state.rq_valid[head]))
+    ppl_head = state.ppl_head.at[s, way].set(
+        jnp.where(have_page & ~exhausted, nxt, state.ppl_head[s, way]))
+    ppl_valid = state.ppl_valid.at[s, way].set(
+        jnp.where(exhausted, False, state.ppl_valid[s, way]))
+    poq_head = jnp.where(exhausted,
+                         (state.poq_head + 1) % cfg.order_q, state.poq_head)
+    poq_len = state.poq_len - exhausted.astype(jnp.int32)
+    core = jnp.maximum(src[jnp.maximum(emit, 0)], 0)
+    inflight = state.inflight.at[core].add(
+        jnp.where(have_page, -1, 0).astype(jnp.int32))
+
+    return state._replace(rq_valid=rq_valid, ppl_head=ppl_head,
+                          ppl_valid=ppl_valid, poq_head=poq_head,
+                          poq_len=poq_len, inflight=inflight), emit
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6))
+def _run(pages: jnp.ndarray, port_req: jnp.ndarray, port_len: jnp.ndarray,
+         src: jnp.ndarray, n_req: int, n_cores: int, cfg: MarsConfig):
+    def step(state, _):
+        for p in range(cfg.n_ports):   # static unroll: one attempt per port
+            state = _insert_port(state, p, port_req, port_len, pages, src, cfg)
+        state, emit = _forward(state, src, cfg)
+        return state, emit
+
+    # forwarding needs n non-idle cycles; idle cycles are bounded by port
+    # stalls which resolve as pages drain -> 3n + slack always completes.
+    n_cycles = 3 * n_req + cfg.request_q + 64
+    state, emits = jax.lax.scan(step, _init_state(cfg, n_cores), None,
+                                length=n_cycles)
+    return state, emits
+
+
+def mars_reorder(addr: np.ndarray | jnp.ndarray,
+                 ports: np.ndarray | None = None,
+                 cfg: MarsConfig | None = None,
+                 src: np.ndarray | None = None) -> tuple[np.ndarray, dict]:
+    """Run the cycle-level MARS engine over a request stream.
+
+    ``ports``: per-request boundary-port id (e.g. source shader-core group);
+    defaults to distributing the stream round-robin over the ports, which
+    preserves arrival order per port.
+
+    Returns (perm, stats): ``perm`` is the permutation such that
+    ``addr[perm]`` is the order requests leave MARS toward the memory
+    controller; ``stats`` has stall/latency counters.
+    """
+    cfg = cfg or MarsConfig()
+    addr = np.asarray(addr)
+    n = int(addr.shape[0])
+    pages = jnp.asarray(np.asarray(addr, np.int64) >> PAGE_SHIFT, jnp.int32)
+    if ports is None:
+        ports = np.arange(n) % cfg.n_ports
+    ports = np.asarray(ports) % cfg.n_ports
+    if src is None:
+        src = ports.astype(np.int32)   # 1 "core" per port if not given
+    src = np.asarray(src, np.int32)
+    n_cores = int(src.max()) + 1 if n else 1
+    # per-port request-index queues, padded to equal length
+    port_lists = [np.flatnonzero(ports == p) for p in range(cfg.n_ports)]
+    max_len = max((len(l) for l in port_lists), default=0)
+    port_req = np.full((cfg.n_ports, max(max_len, 1)), -1, np.int32)
+    for p, l in enumerate(port_lists):
+        port_req[p, :len(l)] = l
+    port_len = np.array([len(l) for l in port_lists], np.int32)
+
+    state, emits = _run(pages, jnp.asarray(port_req), jnp.asarray(port_len),
+                        jnp.asarray(src), n, n_cores, cfg)
+    emits = np.asarray(emits)
+    perm = emits[emits >= 0]
+    if perm.shape[0] != n:  # engine must drain completely
+        raise AssertionError(
+            f"MARS drained {perm.shape[0]}/{n} requests — engine bug")
+    if np.unique(perm).shape[0] != n:
+        raise AssertionError("MARS emitted a non-permutation — engine bug")
+    emit_cycles = np.flatnonzero(emits >= 0)
+    stats = {
+        "stall_events": int(state.stalls),
+        "total_cycles": int(emit_cycles[-1] + 1) if n else 0,
+        "idle_frac": 1.0 - n / float(emit_cycles[-1] + 1) if n else 0.0,
+    }
+    return perm, stats
+
+
+def mars_reorder_reference(addr: np.ndarray, ports: np.ndarray | None = None,
+                           cfg: MarsConfig | None = None,
+                           src: np.ndarray | None = None) -> np.ndarray:
+    """Slow pure-python oracle of the same engine (for tests)."""
+    cfg = cfg or MarsConfig()
+    pages = np.asarray(addr, np.int64) >> PAGE_SHIFT
+    n = len(pages)
+    if ports is None:
+        ports = np.arange(n) % cfg.n_ports
+    ports = np.asarray(ports) % cfg.n_ports
+    if src is None:
+        src = ports.astype(np.int32)
+    src = np.asarray(src, np.int32)
+    inflight: dict[int, int] = {}
+    from collections import OrderedDict, deque
+    queues = [deque(np.flatnonzero(ports == p)) for p in range(cfg.n_ports)]
+    buffered: "OrderedDict[int, deque[int]]" = OrderedDict()  # page -> [gidx]
+    setcnt: dict[int, set[int]] = {}
+    total = 0
+    out: list[int] = []
+    while len(out) < n:
+        for q in queues:                       # one attempt per port
+            if not q:
+                continue
+            g = int(q[0])
+            if inflight.get(int(src[g]), 0) >= cfg.mshr_per_core:
+                continue
+            p = int(pages[g])
+            s = _page_set_py(p, cfg.nsets)
+            if p in buffered:
+                if total < cfg.request_q:
+                    buffered[p].append(g)
+                    total += 1
+                    inflight[int(src[g])] = inflight.get(int(src[g]), 0) + 1
+                    q.popleft()
+            else:
+                ways = setcnt.setdefault(s, set())
+                if len(ways) < cfg.ways and total < cfg.request_q:
+                    buffered[p] = deque([g])
+                    ways.add(p)
+                    total += 1
+                    inflight[int(src[g])] = inflight.get(int(src[g]), 0) + 1
+                    q.popleft()
+        if buffered:                           # forward one request
+            page0 = next(iter(buffered))       # oldest-allocated page
+            lst = buffered[page0]
+            gg = int(lst.popleft())
+            out.append(gg)
+            inflight[int(src[gg])] -= 1
+            total -= 1
+            if not lst:
+                del buffered[page0]
+                setcnt[_page_set_py(page0, cfg.nsets)].discard(page0)
+    return np.asarray(out, np.int64)

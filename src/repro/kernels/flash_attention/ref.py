@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for blockwise causal attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D); fp32 softmax."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    S, Sk = q.shape[1], k.shape[1]
+    if causal:
+        qpos = jnp.arange(S)[:, None] + (Sk - S)
+        kpos = jnp.arange(Sk)[None, :]
+        m = kpos <= qpos
+        if window:
+            m &= kpos > qpos - window
+        logits = jnp.where(m, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

@@ -1,0 +1,59 @@
+"""MARS-sorted embedding gather — jit'd public op.
+
+TPU adaptation of the paper: a token-id stream arrives in sequence order
+(interleaved "streams" of the batch); gathering rows in that order produces
+scattered HBM reads over a (vocab x d) table that can span hundreds of MB.
+MARS-sorting the ids groups reads by table *page* so consecutive reads hit
+the same HBM page, then the inverse permutation restores order — identical
+semantics (see ref.py), better achieved bandwidth.
+
+On CPU/GPU backends the sort is usually not worth it; the Pallas kernel
+(``mars_gather.py``) implements the sorted gather with explicit VMEM block
+staging on TPU.  The op picks the strategy via ``mode``:
+  - "auto": sorted path for large tables, plain take otherwise
+  - "sorted" / "plain": forced
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reorder import inverse_permutation
+from repro.kernels.mars_gather.ref import embedding_gather_ref
+
+# rows per 4KB-ish HBM "page" bucket used as the MARS grouping key; with
+# bf16 d_model>=1024 a row exceeds a page, so grouping by row id directly
+# (page == row) is the natural key; we keep a shift for small-row tables.
+_PAGE_SHIFT = 2
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def embedding_gather(table: jnp.ndarray, ids: jnp.ndarray,
+                     mode: str = "auto") -> jnp.ndarray:
+    shape = ids.shape
+    flat = ids.reshape(-1)
+    if mode == "plain" or (mode == "auto" and
+                           table.shape[0] * table.shape[1] < (1 << 22)):
+        out = embedding_gather_ref(table, flat)
+        return out.reshape(*shape, table.shape[1])
+    # MARS path: stable sort by page-of-row, gather grouped, unsort
+    page = flat >> _PAGE_SHIFT
+    perm = jnp.argsort(page, stable=True)
+    sorted_ids = flat[perm]
+    gathered = jnp.take(table, sorted_ids, axis=0)
+    out = gathered[inverse_permutation(perm)]
+    return out.reshape(*shape, table.shape[1])
+
+
+def embedding_grad_scatter(ids: jnp.ndarray, grads: jnp.ndarray,
+                           vocab: int) -> jnp.ndarray:
+    """Backward of the gather: MARS-sorted segment-sum scatter-add.
+
+    Sorting assignments by destination row turns the scatter into
+    contiguous per-row accumulation (sequential HBM writes)."""
+    flat = ids.reshape(-1)
+    g = grads.reshape(-1, grads.shape[-1])
+    perm = jnp.argsort(flat, stable=True)
+    return jnp.zeros((vocab, g.shape[-1]), g.dtype).at[flat[perm]].add(g[perm])

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the MARS-sorted embedding gather.
+
+The contract: ``gather(table, ids) == table[ids]`` exactly — the MARS
+reorder is a pure performance transform and must be bit-transparent.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, D); ids: int (...) -> (..., D)."""
+    return jnp.take(table, ids, axis=0)

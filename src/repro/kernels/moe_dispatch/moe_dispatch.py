@@ -1,0 +1,79 @@
+"""MARS-sorted grouped matmul — Pallas TPU kernel.
+
+The TPU rendering of the paper's RequestQ drain: token rows arrive already
+grouped by destination expert ("page"), each group padded to the M-tile so
+every grid row belongs to exactly one expert.  The kernel walks groups
+back-to-back — each expert's weight matrix streams HBM->VMEM exactly once
+per N-tile column (sequential reads, the CAS/ACT analogue), against full
+128x128 MXU tiles.
+
+Grid: (M_tiles, N_tiles, K_tiles) with a float32 VMEM accumulator.  The
+expert for row-tile ``i`` comes from the scalar-prefetched ``tile_group``
+array, which the weight BlockSpec index map reads — the PhyPageList lookup
+in hardware terms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _kernel(tile_group_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    del tile_group_ref  # consumed by the index maps
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_matmul(x, w, tile_group, *, bm: int = DEFAULT_BM,
+                   bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                   interpret: bool = False):
+    """x: (M, K), rows sorted by group and group-padded so each row tile
+    [i*bm, (i+1)*bm) belongs to one group; w: (G, K, N); tile_group: int32
+    (M//bm,) expert id per row tile.  Returns (M, N) in x.dtype."""
+    M, K = x.shape
+    G, Kw, N = w.shape
+    assert K == Kw, (K, Kw)
+    assert M % bm == 0, (M, bm)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    assert K % bk == 0 and N % bn == 0, (K, bk, N, bn)
+    n_m, n_n, n_k = M // bm, N // bn, K // bk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, tg: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, tg: (tg[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, tg: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )
+    return kernel(tile_group, x, w)

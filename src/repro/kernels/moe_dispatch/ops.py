@@ -1,0 +1,91 @@
+"""Public MoE-dispatch op: MARS sort + group padding + grouped matmul.
+
+``mars_moe_ffn(x, expert_idx, gates, w_in, w_gate, w_out)`` runs a full
+expert FFN over top-k routed tokens:
+
+  1. flatten (token, k) assignments, MARS-sort by expert id ("page")
+  2. pad each expert's segment to the M-tile so row tiles are single-expert
+  3. grouped matmuls (Pallas on TPU, ragged_dot elsewhere)
+  4. inverse-permute + gate-weighted combine
+
+Semantics identical to ref.py's dense oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.moe_dispatch.moe_dispatch import grouped_matmul, DEFAULT_BM
+from repro.models import layers
+
+
+def pad_sorted_groups(sorted_e, perm, n_groups: int, bm: int):
+    """Compute padded slot of each sorted assignment + tile->group map.
+
+    Each group's segment starts at a bm-aligned offset; rows inside a
+    padded区 not backed by a real assignment stay zero.
+    Returns (slot (A,), tile_group (n_tiles,), M_pad)."""
+    A = sorted_e.shape[0]
+    counts = jnp.bincount(sorted_e, length=n_groups)
+    padded = ((counts + bm - 1) // bm) * bm
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    seg_start = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                 jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    slot = starts[sorted_e] + (jnp.arange(A, dtype=jnp.int32)
+                               - seg_start[sorted_e])
+    M_pad = A + n_groups * bm          # static upper bound
+    n_tiles = M_pad // bm
+    # tile -> group: group whose padded segment covers the tile start
+    bounds = jnp.cumsum(padded)        # (G,)
+    tile_starts = jnp.arange(n_tiles, dtype=jnp.int32) * bm
+    tile_group = jnp.searchsorted(bounds, tile_starts, side="right")
+    tile_group = jnp.minimum(tile_group, n_groups - 1).astype(jnp.int32)
+    return slot, tile_group, M_pad
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "act", "bm",
+                                             "use_pallas", "interpret"))
+def mars_moe_ffn(x, expert_idx, gates, w_in, w_gate, w_out, *,
+                 n_experts: int, act: str = "silu", bm: int = DEFAULT_BM,
+                 use_pallas: bool = False, interpret: bool = True):
+    """x: (T, d); expert_idx: (T, k); gates: (T, k); w_*: (E, d, f)/(E, f, d).
+
+    Returns (T, d).  With use_pallas the grouped matmuls run through the
+    Pallas kernel (interpret=True validates on CPU); otherwise ragged_dot.
+    """
+    T, d = x.shape
+    k = expert_idx.shape[1]
+    A = T * k
+    flat_e = expert_idx.reshape(-1).astype(jnp.int32)
+    perm = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    sorted_e = flat_e[perm]
+    tok_of = perm // k
+    gathered = x[tok_of]                                # (A, d) MARS order
+
+    if use_pallas:
+        slot, tile_group, M_pad = pad_sorted_groups(sorted_e, perm,
+                                                    n_experts, bm)
+        xbuf = jnp.zeros((M_pad, d), x.dtype).at[slot].set(gathered)
+        h = grouped_matmul(xbuf, w_in, tile_group, bm=bm,
+                           interpret=interpret)
+        g = grouped_matmul(xbuf, w_gate, tile_group, bm=bm,
+                           interpret=interpret)
+        h = layers._act(g, act) * h
+        out_pad = grouped_matmul(h, w_out, tile_group, bm=bm,
+                                 interpret=interpret)
+        out_sorted = out_pad[slot]
+    else:
+        group_sizes = jnp.bincount(sorted_e, length=n_experts)
+        h = jax.lax.ragged_dot(gathered, w_in, group_sizes)
+        g = jax.lax.ragged_dot(gathered, w_gate, group_sizes)
+        h = layers._act(g, act) * h
+        out_sorted = jax.lax.ragged_dot(h, w_out, group_sizes)
+
+    inv = jnp.zeros(A, jnp.int32).at[perm].set(jnp.arange(A, dtype=jnp.int32))
+    out_flat = out_sorted[inv]
+    w = gates.reshape(-1, 1).astype(out_flat.dtype)
+    return jnp.zeros_like(x).at[jnp.arange(A) // k].add(out_flat * w)

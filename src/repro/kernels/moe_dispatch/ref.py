@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the MARS-sorted grouped matmul.
+
+Contract: ``grouped_matmul(x, w, group_sizes)`` where
+  x: (M, K)  rows sorted by group (MARS page order)
+  w: (G, K, N) per-group weights
+  group_sizes: int32 (G,), sum <= M (trailing rows belong to the last group
+  with zero semantic weight — callers zero them)
+
+out[i] = x[i] @ w[g(i)]  with g(i) the group containing row i.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def grouped_matmul_ref(x, w, group_sizes):
+    M = x.shape[0]
+    G = w.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    gid = jnp.searchsorted(ends, jnp.arange(M), side="right")
+    gid = jnp.minimum(gid, G - 1)
+    wx = w[gid]                      # (M, K, N) — oracle only, O(M*K*N) mem
+    return jnp.einsum("mk,mkn->mn", x, wx)
+
+
+def grouped_matmul_ref_loop(x, w, group_sizes):
+    """Second independent oracle (numpy loop) for small tests."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    gs = np.asarray(group_sizes)
+    out = np.zeros((x.shape[0], w.shape[2]), np.float32)
+    r = 0
+    for g, n in enumerate(gs):
+        out[r:r + n] = x[r:r + n] @ w[g]
+        r += n
+    if r < x.shape[0]:
+        out[r:] = x[r:] @ w[-1]
+    return out

@@ -1,0 +1,104 @@
+"""Paged-KV decode attention — Pallas TPU kernel (MARS page-visit order).
+
+The serving analogue of the paper: a decode batch's KV reads are scattered
+across cache pages ("DRAM rows"); visiting each sequence's pages
+*in page-table order, page-contiguously* turns the gather into sequential
+HBM block reads.  The page table is scalar-prefetched and drives the K/V
+BlockSpec index maps — exactly the PhyPageList head/tail walk.
+
+Grid: (B, pages_per_seq) with online-softmax state in VMEM scratch across
+the page loop; one query token per sequence (decode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page: int, n_pages: int,
+            n_rep: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ln = len_ref[b]
+    base = j * page
+
+    @pl.when(base < ln)
+    def _body():
+        q = q_ref[0]                                  # (H, D)
+        k = k_ref[0]                                  # (page, Hkv, D)
+        v = v_ref[0]
+        Hkv = k.shape[1]
+        H = q.shape[0]
+        # GQA: fold query heads onto kv heads: (Hkv, n_rep, D)
+        qg = q.reshape(Hkv, n_rep, -1)
+        s = jnp.einsum("hrd,phd->hrp", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(pos < ln, s, NEG_INF)
+        s = s.reshape(H, page)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+        pv = jnp.einsum("hrp,phd->hrd",
+                        p.reshape(Hkv, n_rep, page),
+                        v.astype(jnp.float32))
+        acc_ref[...] = acc_ref[...] * alpha + pv.reshape(H, -1)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_tables, lengths, *,
+                    interpret: bool = False):
+    """q: (B, H, D); k/v_pages: (P, page, Hkv, D); page_tables: (B, n_pages);
+    lengths: (B,).  Returns (B, H, D)."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    n_pages = page_tables.shape[1]
+    n_rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, pt, ln: (b, 0, 0)),
+            # MARS page walk: the page table drives the block index
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D),
+                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, pt, ln: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((H, 1), jnp.float32),
+                        pltpu.VMEM((H, 1), jnp.float32),
+                        pltpu.VMEM((H, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, n_pages=n_pages,
+                          n_rep=n_rep, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_tables, lengths, q, k_pages, v_pages)

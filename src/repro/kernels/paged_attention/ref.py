@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for paged-KV decode attention.
+
+Cache layout: KV lives in fixed-size pages; each sequence owns a list of
+page ids (its "page table").  One decode step attends one query token per
+sequence over its first ``length`` cached positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths):
+    """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D);
+    page_tables: int32 (B, pages_per_seq); lengths: int32 (B,).
+
+    Returns (B, H, D).  GQA via H % Hkv == 0 head repetition."""
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    n_rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    def one(qb, pt, ln):
+        k = k_pages[pt].reshape(-1, Hkv, D)      # (S_max, Hkv, D)
+        v = v_pages[pt].reshape(-1, Hkv, D)
+        k = jnp.repeat(k, n_rep, axis=1)
+        v = jnp.repeat(v, n_rep, axis=1)
+        s = jnp.einsum("hd,khd->hk", qb, k).astype(jnp.float32) * scale
+        mask = jnp.arange(k.shape[0]) < ln
+        s = jnp.where(mask[None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("hk,khd->hd", w.astype(qb.dtype), v)
+
+    return jax.vmap(one)(q, page_tables, lengths)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD chunked scan: the sequential recurrence.
+
+y_t = C_t . s_t,   s_t = exp(dt_t * A) * s_{t-1} + dt_t * (B_t (x) x_t)
+
+This is the O(S) literal recurrence; the chunked kernel must match it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, b, c, la, dt):
+    """x: (B,S,H,P); b,c: (B,S,N); la,dt: (B,S,H) -> (y (B,S,H,P), state)."""
+    Bz, S, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(s, t):
+        xt, bt, ct, lat, dtt = t
+        s = s * jnp.exp(lat)[:, :, None, None] \
+            + jnp.einsum("bhp,bn->bhpn", dtt[..., None] * xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    s0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          b.transpose(1, 0, 2).astype(jnp.float32),
+          c.transpose(1, 0, 2).astype(jnp.float32),
+          la.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s

@@ -1,0 +1,99 @@
+"""SSD (Mamba2) chunked scan — Pallas TPU kernel.
+
+One grid step processes one (batch, head-block, chunk): the within-chunk
+quadratic term runs on the MXU from VMEM-resident tiles, and the
+inter-chunk state (H_blk, P, N) is carried in VMEM scratch across the
+chunk dimension (sequential grid axis) — HBM sees each token exactly once.
+
+Grid: (B, H_blocks, n_chunks); chunk innermost so the scratch state
+carries the recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, la_ref, dt_ref, y_ref, s_final_ref,
+            state_ref, *, n_chunks: int, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (q, Hb, P)
+    b = b_ref[0].astype(jnp.float32)        # (q, N)
+    c = c_ref[0].astype(jnp.float32)        # (q, N)
+    la = la_ref[0].astype(jnp.float32)      # (q, Hb)
+    dt = dt_ref[0].astype(jnp.float32)      # (q, Hb)
+
+    cum = jnp.cumsum(la, axis=0)            # (q, Hb)
+    # within-chunk quadratic term
+    li = cum[:, None, :] - cum[None, :, :]  # (q, k, Hb)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = (ik <= iq)[:, :, None]
+    L = jnp.where(tri, jnp.exp(jnp.minimum(li, 0.0)), 0.0)
+    scores = jnp.einsum("qn,kn->qk", c, b)[:, :, None] * L \
+        * dt[None, :, :]                    # (q, k, Hb)
+    y_intra = jnp.einsum("qkh,khp->qhp", scores, x)
+
+    # inter-chunk: contribution of carried state
+    s_prev = state_ref[...]                 # (Hb, P, N)
+    y_inter = jnp.einsum("qn,hpn,qh->qhp", c, s_prev, jnp.exp(cum))
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: s = decay_chunk * s + sum_k decay(end..k) dt_k B_k x_k
+    dec_end = jnp.exp(cum[-1:, :] - cum)    # (q, Hb)
+    z = jnp.einsum("kn,kh,khp->hpn", b, dec_end * dt, x)
+    state_ref[...] = s_prev * jnp.exp(cum[-1])[:, None, None] + z
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        s_final_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "h_block",
+                                             "interpret"))
+def ssd_scan(x, b, c, la, dt, *, chunk: int = 64, h_block: int = 0,
+             interpret: bool = False):
+    """x: (B,S,H,P); b,c: (B,S,N); la,dt: (B,S,H).
+
+    Returns (y (B,S,H,P) float32, final_state (B,H,P,N) float32)."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    q = min(chunk, S)
+    assert S % q == 0
+    hb = h_block or H
+    assert H % hb == 0
+    n_chunks = S // q
+    grid = (B, H // hb, n_chunks)
+
+    y, s_final = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, hb, P), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, q, N), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, q, N), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, q, hb), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, q, hb), lambda ib, ih, ic: (ib, ic, ih)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, hb, P), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, la, dt)
+    return y, s_final

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import so the host platform
+# exposes 512 placeholder devices for the production mesh.  Everything below
+# is ordinary code.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: pjit sharding propagation succeeds, the collective schedule is
+valid, and ``memory_analysis`` / ``cost_analysis`` quantify the compiled
+program.  Roofline terms (EXPERIMENTS.md §Roofline) come straight from the
+artifacts produced here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1_5_0_5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import ModelConfig, SHAPES, shape_by_name, \
+    cell_applicable
+from repro.optim import adamw as optim
+from repro.serve import step as serve_step_mod
+from repro.sharding import context as shctx, rules
+from repro.train import step as train_step_mod
+from repro.utils import hlo as hlo_util
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+
+
+def opt_config_for(cfg: ModelConfig) -> optim.OptConfig:
+    # trillion-scale MoE: factored second moment, bf16 has no full AdamW
+    if cfg.n_params() > 1e11:
+        return optim.OptConfig(kind="adafactor")
+    return optim.OptConfig(kind="adamw")
+
+
+def input_specs(cfg: ModelConfig, cell, mesh):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    bsh = rules.batch_sharding(mesh, B)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bsh)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.frontend:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16, sharding=bsh)
+    return out
+
+
+def abstract_state(cfg: ModelConfig, mesh, *, fsdp: bool = True,
+                   with_opt: bool = True, opt_cfg=None):
+    """Abstract (ShapeDtypeStruct) params [+ optimizer state] with shardings."""
+    cap = {}
+
+    def mk():
+        b = lm.init(cfg, jax.random.key(0))
+        cap["specs"] = b.specs      # static python tree, safe to capture
+        return b.params
+    params_abs = jax.eval_shape(mk)
+    pshard = rules.param_shardings(cap["specs"], params_abs, mesh, fsdp=fsdp)
+    params = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        params_abs, pshard)
+    if not with_opt:
+        return params, pshard, None, None
+    opt_abs = jax.eval_shape(lambda p: optim.opt_init(p, opt_cfg), params)
+    oshard = optim.state_shardings(opt_abs, pshard, mesh)
+    opt = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        opt_abs, oshard)
+    return params, pshard, opt, oshard
+
+
+def _analyze(lowered, compiled, chips: int, model_flops: float) -> dict:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    try:
+        txt = compiled.as_text()
+    except Exception:
+        txt = lowered.as_text()
+    coll = hlo_util.collective_bytes(txt)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+    # cost_analysis counts while-loop bodies once; the analytic model
+    # flops are a hard floor for executed matmul work, so the compute term
+    # uses max(reported, model).  Collective bytes are trip-count-weighted
+    # by the HLO parser.
+    mf_per_chip_ = model_flops / chips
+    t_compute = max(flops, mf_per_chip_) / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll.get("total", 0) / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf_per_chip = model_flops / chips
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll.get("total", 0),
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "memory": mem,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flop_ratio": mf_per_chip / flops if flops else 0.0,
+        "roofline_bound_s": max(t_compute, t_memory, t_coll),
+        "roofline_fraction":
+            (t_compute / max(t_compute, t_memory, t_coll)
+             if max(t_compute, t_memory, t_coll) else 0.0),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: bool = True, remat: bool = True,
+             kv_dtype: str = "") -> dict:
+    cfg = configs.get(arch)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+    cell = shape_by_name(shape_name)
+    ok, why = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        with shctx.use_mesh(mesh):
+            if cell.kind == "train":
+                opt_cfg = opt_config_for(cfg)
+                params, pshard, opt, oshard = abstract_state(
+                    cfg, mesh, fsdp=fsdp, with_opt=True, opt_cfg=opt_cfg)
+                flags = train_step_mod.TrainFlags(remat=remat)
+                step = train_step_mod.make_train_step(cfg, opt_cfg, flags)
+                batch = input_specs(cfg, cell, mesh)
+                fn = jax.jit(step, donate_argnums=(0, 1))
+                lowered = fn.lower(params, opt, batch)
+                rec["params_gb_per_chip"] = round(
+                    rules.sharded_bytes_per_device(params, pshard, mesh)
+                    / 1e9, 3)
+                rec["opt_gb_per_chip"] = round(
+                    rules.sharded_bytes_per_device(opt, oshard, mesh)
+                    / 1e9, 3)
+                # training compute: fwd+bwd ~ 3x forward matmul flops
+                model_flops = 6.0 * cfg.n_active_params() \
+                    * cell.global_batch * cell.seq_len
+            else:
+                params, pshard, _, _ = abstract_state(
+                    cfg, mesh, fsdp=False, with_opt=False)
+                B = cell.global_batch
+                cache_abs = lm.abstract_cache(
+                    cfg, B, cell.seq_len,
+                    enc_len=cfg.frontend_seq if cfg.family == "encdec" else 0)
+                cshard = rules.cache_shardings(mesh, cfg, B)
+                cache = jax.tree.map(
+                    lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                                      sharding=s)
+                    if a is not None else None,
+                    cache_abs, cshard,
+                    is_leaf=lambda x: x is None or isinstance(
+                        x, jax.ShapeDtypeStruct))
+                tok = jax.ShapeDtypeStruct(
+                    (B, 1), jnp.int32,
+                    sharding=rules.batch_sharding(mesh, B))
+                rec["params_gb_per_chip"] = round(
+                    rules.sharded_bytes_per_device(params, pshard, mesh)
+                    / 1e9, 3)
+                rec["cache_gb_per_chip"] = round(
+                    rules.sharded_bytes_per_device(
+                        jax.tree.leaves(cache_abs),
+                        jax.tree.leaves(cshard,
+                                        is_leaf=lambda x: x is None),
+                        mesh) / 1e9, 3)
+                if cell.kind == "prefill":
+                    # prefill lowers forward over the full prompt
+                    def fwd(p, batch):
+                        logits, aux = lm.forward(p, cfg, batch["tokens"],
+                                                 batch.get("frontend"),
+                                                 remat=False)
+                        return logits[:, -1]
+                    batch = input_specs(cfg, cell, mesh)
+                    batch.pop("labels")
+                    fn = jax.jit(fwd)
+                    lowered = fn.lower(params, batch)
+                    model_flops = 2.0 * cfg.n_active_params() \
+                        * cell.global_batch * cell.seq_len
+                else:
+                    step = serve_step_mod.make_decode_step(cfg)
+                    fn = jax.jit(step, donate_argnums=(1,))
+                    lowered = fn.lower(params, cache, tok)
+                    model_flops = 2.0 * cfg.n_active_params() * B
+            compiled = lowered.compile()
+            rec.update(_analyze(lowered, compiled, chips, model_flops))
+            rec.update(status="ok",
+                       compile_s=round(time.time() - t0, 1),
+                       chips=chips,
+                       n_params=cfg.n_params(),
+                       n_active=cfg.n_active_params())
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:],
+                   compile_s=round(time.time() - t0, 1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--kv-dtype", default="")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in configs.all_archs():
+            for s in SHAPES:
+                for mp in (False, True):
+                    cells.append((a, s.name, mp))
+    else:
+        cells = [(args.arch, args.shape, args.mesh == "multi")]
+
+    out_fh = open(args.out, "a") if args.out else None
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, mp, fsdp=not args.no_fsdp,
+                       remat=not args.no_remat, kv_dtype=args.kv_dtype)
+        line = json.dumps(rec)
+        print(line, flush=True)
+        if out_fh:
+            out_fh.write(line + "\n")
+            out_fh.flush()
+        if rec.get("status") == "ok":
+            print(f"#  mem={rec['memory']}", flush=True)
+            print(f"#  cost: flops/chip={rec['hlo_flops_per_chip']:.3e} "
+                  f"bytes/chip={rec['hlo_bytes_per_chip']:.3e} "
+                  f"coll/chip={rec['collective_bytes_per_chip']:.3e} "
+                  f"dominant={rec['dominant']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod : (16, 16)    axes ("data", "model")   = 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+Functions, not module-level constants, so importing never touches jax
+device state (the dry-run must set XLA_FLAGS before first device init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

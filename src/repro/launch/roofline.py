@@ -1,0 +1,88 @@
+"""Roofline table generation from dry-run JSONL records.
+
+``python -m repro.launch.roofline results/dryrun.jsonl`` prints the
+EXPERIMENTS.md §Roofline markdown table and per-cell bottleneck analysis.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+MOVE_HINTS = {
+    "compute": "raise MXU occupancy: bigger per-chip tiles (less TP padding)"
+               " or fewer rematerialized flops",
+    "memory": "fuse more (CPU-backend bytes are unfused upper bounds); cast"
+              " activations bf16; increase arithmetic intensity per HBM pass",
+    "collective": "overlap collectives with compute; hierarchical"
+                  " all-reduce; shrink MoE psum via all-to-all dispatch",
+}
+
+
+def load(path: str) -> list[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("{"):
+                out.append(json.loads(line))
+    # last record per (arch, shape, mesh) wins (reruns append)
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP | {r['reason']} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | {r['error'][:60]} |")
+    tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+    dom = r["dominant"]
+    frac = r["roofline_fraction"]
+    ratio = r["useful_flop_ratio"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {tc:.2e} | "
+            f"{tm:.2e} | {tl:.2e} | {dom} (frac {frac:.3f}, "
+            f"useful {ratio:.2f}) | {MOVE_HINTS[dom][:58]} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+          " bottleneck | to move it |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        print(f"\n{len(ok)} ok / "
+              f"{sum(r['status'] == 'skip' for r in recs)} skip / "
+              f"{sum(r['status'] == 'error' for r in recs)} error")
+        by_dom = defaultdict(int)
+        for r in ok:
+            by_dom[r["dominant"]] += 1
+        print("bottleneck distribution:", dict(by_dom))
+        worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+        print("worst roofline fractions:",
+              [(r["arch"], r["shape"], round(r["roofline_fraction"], 4))
+               for r in worst])
+        coll = sorted(ok, key=lambda r: -r["t_collective_s"])[:5]
+        print("most collective-bound:",
+              [(r["arch"], r["shape"], f"{r['t_collective_s']:.2e}s")
+               for r in coll])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Serving driver: continuous batching behind the MARS request scheduler.
+
+``python -m repro.launch.serve --arch qwen1_5_0_5b --smoke --requests 64``
+
+Demonstrates the online MARS path end-to-end: requests (some sharing
+prompt prefixes = "pages") flow through the bounded scheduler; batches are
+formed page-major oldest-page-first; prefix-sharing batches reuse a
+prefill cache.  Reports the serving CAS/ACT analogue: unique prefix blocks
+per scheduled batch, with and without MARS.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.serve.step import make_decode_step
+from repro.serving.scheduler import MarsScheduler, Request, \
+    unique_prefix_blocks
+
+
+def synth_requests(n: int, vocab: int, n_prefixes: int = 8,
+                   prefix_len: int = 16, seed: int = 0):
+    """Interleaved request streams: n_prefixes hot prompt prefixes."""
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(rng.integers(1, vocab, prefix_len).tolist())
+                for _ in range(n_prefixes)]
+    out = []
+    for i in range(n):
+        p = prefixes[i % n_prefixes]       # round-robin = interleaved
+        tail = tuple(rng.integers(1, vocab, 8).tolist())
+        out.append(Request(rid=i, prompt=p + tail, arrival=i * 1e-3,
+                           prefix_len=prefix_len))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke \
+        else configs.get(args.arch)
+    params = lm.init(cfg, jax.random.key(0)).params
+    decode = jax.jit(make_decode_step(cfg))
+
+    reqs = synth_requests(args.requests, cfg.vocab)
+    results = {}
+    for mars in (False, True):
+        sched = MarsScheduler(mars=mars)
+        pending = list(reqs)
+        served = 0
+        blocks = 0
+        batches = 0
+        t0 = time.time()
+        while pending or len(sched):
+            while pending and sched.offer(pending[0]):
+                pending.pop(0)
+            batch = sched.schedule_batch(args.batch)
+            if not batch:
+                break
+            blocks += unique_prefix_blocks(batch)
+            batches += 1
+            # run the batch: prefill the (page-shared) prompts + decode
+            prompts = jnp.asarray([r.prompt for r in batch], jnp.int32)
+            max_seq = prompts.shape[1] + args.new_tokens
+            _, cache = lm.prefill(params, cfg, prompts, max_seq=max_seq)
+            tok = prompts[:, -1:]
+            for _ in range(args.new_tokens):
+                tok, _, cache = decode(params, cache, tok)
+            served += len(batch)
+        dt = time.time() - t0
+        results[mars] = dict(served=served, batches=batches,
+                             blocks_per_batch=blocks / max(batches, 1),
+                             mean_wait=sched.stats.mean_wait, wall_s=dt)
+        print(f"[serve] mars={mars} served={served} batches={batches} "
+              f"unique-prefix-blocks/batch={blocks/max(batches,1):.2f} "
+              f"wall={dt:.1f}s")
+    base, mars_r = results[False], results[True]
+    gain = base["blocks_per_batch"] / max(mars_r["blocks_per_batch"], 1e-9)
+    print(f"[serve] MARS page-coherence gain: {gain:.2f}x fewer unique "
+          f"prefix blocks per batch")
+    return results
+
+
+if __name__ == "__main__":
+    main()

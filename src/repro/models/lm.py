@@ -1,0 +1,437 @@
+"""Unified causal LM covering every assigned architecture family.
+
+One parameter tree, one scan-over-layers forward, three entry points:
+
+  ``forward``      — teacher-forced training/prefill logits
+  ``prefill``      — build the serving cache from a prompt
+  ``decode_step``  — one-token serve step against the cache
+
+Families: dense / moe (leading-dense + shared experts + dense residual) /
+ssm (mamba2) / hybrid (parallel attention+SSM heads, hymba-style) /
+encdec (whisper: audio-frame encoder + cross-attention decoder) /
+vlm (paligemma: image-patch prefix LM).  Modality frontends are stubs per
+the assignment: ``frontend_emb`` carries precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamBundle, _merge
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, li: int, *, decoder: bool = False,
+                encoder: bool = False) -> ParamBundle:
+    ks = jax.random.split(key, 8)
+    items = []
+    if cfg.has_attention:
+        items += [("ln1", layers.norm_init(cfg)),
+                  ("attn", layers.attention_init(ks[0], cfg))]
+    if cfg.has_ssm and not encoder:
+        items += [("ln_ssm", layers.norm_init(cfg)),
+                  ("ssm", ssm_mod.ssm_init(ks[1], cfg))]
+    if decoder:
+        items += [("lnx", layers.norm_init(cfg)),
+                  ("xattn", layers.attention_init(ks[2], cfg, cross=True))]
+    is_moe_layer = cfg.is_moe and li >= cfg.n_dense_layers and not encoder
+    if is_moe_layer:
+        items += [("ln2", layers.norm_init(cfg)),
+                  ("moe", moe_mod.moe_init(ks[3], cfg))]
+        if cfg.moe_dense_residual:
+            items += [("mlp", layers.mlp_init(ks[4], cfg))]
+    elif cfg.d_ff:
+        items += [("ln2", layers.norm_init(cfg)),
+                  ("mlp", layers.mlp_init(ks[4], cfg))]
+    return _merge(*items)
+
+
+def _stack_bundles(bundles):
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[b.params for b in bundles])
+    specs = jax.tree.map(lambda s: ("layers",) + tuple(s),
+                         bundles[0].specs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return ParamBundle(params, specs)
+
+
+def init(cfg: ModelConfig, key) -> ParamBundle:
+    ks = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 4)
+    items = [("embed", layers.embedding_init(ks[0], cfg)),
+             ("final_norm", layers.norm_init(cfg))]
+    decoder = cfg.family == "encdec"
+    nd = cfg.n_dense_layers if cfg.is_moe else 0
+    if nd:
+        items.append(("blocks_dense", _stack_bundles(
+            [_block_init(ks[1 + i], cfg, 0, decoder=decoder)
+             for i in range(nd)])))
+    items.append(("blocks", _stack_bundles(
+        [_block_init(ks[1 + nd + i], cfg, nd + i, decoder=decoder)
+         for i in range(cfg.n_layers - nd)])))
+    if cfg.enc_layers:
+        enc = _stack_bundles(
+            [_block_init(ks[1 + cfg.n_layers + i], cfg, i, encoder=True)
+             for i in range(cfg.enc_layers)])
+        items.append(("encoder", enc))
+        items.append(("enc_norm", layers.norm_init(cfg)))
+    return _merge(*items)
+
+
+def abstract_init(cfg: ModelConfig):
+    """Shape-only init (no allocation) — used by the dry-run."""
+    return jax.eval_shape(lambda: init(cfg, jax.random.key(0)).params)
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def _is_global_layer(cfg: ModelConfig, li):
+    """Hybrid archs: a few global-attention layers among sliding-window."""
+    if cfg.sliding_window == 0:
+        return jnp.ones((), bool) if isinstance(li, jnp.ndarray) else True
+    if cfg.global_every:
+        return li % cfg.global_every == 0
+    return li < 0  # none
+
+
+def _block_apply(bp, x, cfg: ModelConfig, *, masks, positions,
+                 kv=None, cache_pos=None, ssm_state=None, xkv=None,
+                 is_global=None):
+    """One transformer block.  Returns (x, new_kv, new_ssm_state, aux)."""
+    aux = {}
+    new_kv = None
+    new_ssm = None
+    attn_out = None
+    if cfg.has_attention:
+        mask = masks[0]
+        if cfg.sliding_window and is_global is not None:
+            mask = jnp.where(is_global, masks[1], masks[0])
+        h = layers.apply_norm(bp["ln1"], x, cfg)
+        attn_out, new_kv = layers.attention_apply(
+            bp["attn"], h, cfg, positions=positions, mask=mask,
+            kv_cache=kv, cache_positions=cache_pos)
+    if cfg.has_ssm:
+        hs = layers.apply_norm(bp.get("ln_ssm", bp.get("ln1")), x, cfg)
+        if ssm_state is not None:
+            ssm_out, new_ssm = ssm_mod.ssm_apply(
+                bp["ssm"], hs, cfg, state=ssm_state[0],
+                conv_state=ssm_state[1], return_state=True)
+        else:
+            ssm_out, new_ssm = ssm_mod.ssm_apply(bp["ssm"], hs, cfg,
+                                                 return_state=True)
+        if attn_out is not None:
+            # hymba: parallel heads, mean-combined
+            x = x + 0.5 * (attn_out + ssm_out)
+        else:
+            x = x + ssm_out
+    elif attn_out is not None:
+        x = x + attn_out
+    if "xattn" in bp and xkv is not None:
+        h = layers.apply_norm(bp["lnx"], x, cfg)
+        xo, _ = layers.attention_apply(bp["xattn"], h, cfg,
+                                       positions=None, mask=None, xattn_kv=xkv)
+        x = x + xo
+    if "moe" in bp:
+        h = layers.apply_norm(bp["ln2"], x, cfg)
+        mo, aux = moe_mod.moe_apply(bp["moe"], h, cfg)
+        if cfg.moe_dense_residual and "mlp" in bp:
+            mo = mo + layers.mlp_apply(bp["mlp"], h, cfg)
+        x = x + mo
+    elif "mlp" in bp:
+        h = layers.apply_norm(bp["ln2"], x, cfg)
+        x = x + layers.mlp_apply(bp["mlp"], h, cfg)
+    return x, new_kv, new_ssm, aux
+
+
+def _zero_aux():
+    return {"moe_lb": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32)}
+
+
+def _scan_blocks(stacked, x, cfg: ModelConfig, *, masks, positions,
+                 layer_offset: int, n: int, kv=None, cache_pos=None,
+                 ssm_states=None, xkv=None, remat: bool = False):
+    """lax.scan over stacked block params (+ optional caches)."""
+    li = jnp.arange(layer_offset, layer_offset + n)
+    glob = None
+    if cfg.sliding_window:
+        ge = max(cfg.global_every, 1)
+        glob = (li % ge == 0) if cfg.global_every else jnp.zeros(n, bool)
+
+    def body(carry, inp):
+        xx, aux_acc = carry
+        bp = inp["p"]
+        out, new_kv, new_ssm, aux = _block_apply(
+            bp, xx, cfg, masks=masks, positions=positions,
+            kv=inp.get("kv"), cache_pos=cache_pos,
+            ssm_state=inp.get("ssm"), xkv=inp.get("xkv"),
+            is_global=inp.get("glob"))
+        for k in aux_acc:
+            aux_acc = dict(aux_acc)
+            aux_acc[k] = aux_acc[k] + aux.get(k, 0.0)
+        ys = {}
+        if new_kv is not None:
+            ys["kv"] = new_kv
+        if new_ssm is not None:
+            ys["ssm"] = new_ssm
+        return (out, aux_acc), ys
+
+    fn = jax.checkpoint(body) if remat else body
+    xs: dict = {"p": stacked}
+    if kv is not None:
+        xs["kv"] = kv
+    if ssm_states is not None:
+        xs["ssm"] = ssm_states
+    if xkv is not None:
+        xs["xkv"] = xkv
+    if glob is not None:
+        xs["glob"] = glob
+    (x, aux), ys = jax.lax.scan(fn, (x, _zero_aux()), xs)
+    return x, aux, ys
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _encoder_forward(params, cfg: ModelConfig, frontend_emb):
+    x = frontend_emb.astype(cfg.cdtype)
+    S = x.shape[1]
+    masks = (jnp.ones((S, S), bool), None)
+    positions = jnp.arange(S)[None, :]
+    x, _, _ = _scan_blocks(params["encoder"], x, cfg, masks=masks,
+                           positions=positions, layer_offset=0,
+                           n=cfg.enc_layers)
+    return layers.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kvs(params, cfg: ModelConfig, enc_out):
+    def body(_, bp):
+        return None, layers.cross_kv(bp["xattn"], enc_out, cfg)
+    _, kvs = jax.lax.scan(body, None, params["blocks"])
+    return kvs
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_emb=None,
+            remat: bool = False):
+    """Teacher-forced logits.  tokens: (B, S) int32.
+
+    encdec: frontend_emb (B, Senc, d) feeds the encoder.
+    vlm: frontend_emb (B, P, d) is prepended as a bidirectional prefix;
+    logits are returned for the token part only."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
+    xkv = None
+    prefix = 0
+    if cfg.family == "encdec":
+        enc_out = _encoder_forward(params, cfg, frontend_emb)
+        xkv = _cross_kvs(params, cfg, enc_out)
+    elif cfg.family == "vlm":
+        pimg = frontend_emb.astype(cfg.cdtype)
+        prefix = pimg.shape[1]
+        x = jnp.concatenate([pimg, x], axis=1)
+        positions = jnp.broadcast_to(
+            jnp.arange(prefix + S)[None, :], (B, prefix + S))
+    Sq = x.shape[1]
+    m_causal = layers.causal_mask(Sq, Sq, prefix_len=prefix or None)
+    m_window = layers.causal_mask(Sq, Sq, window=cfg.sliding_window,
+                                  prefix_len=prefix or None) \
+        if cfg.sliding_window else m_causal
+    masks = (m_window if cfg.sliding_window else m_causal, m_causal)
+
+    nd = cfg.n_dense_layers if cfg.is_moe else 0
+    aux_total = _zero_aux()
+    if nd:
+        x, aux, _ = _scan_blocks(params["blocks_dense"], x, cfg, masks=masks,
+                                 positions=positions, layer_offset=0, n=nd,
+                                 remat=remat)
+        aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+    x, aux, _ = _scan_blocks(params["blocks"], x, cfg, masks=masks,
+                             positions=positions, layer_offset=nd,
+                             n=cfg.n_layers - nd, xkv=xkv, remat=remat)
+    aux_total = {k: aux_total[k] + aux[k] for k in aux_total}
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    if prefix:
+        x = x[:, prefix:]
+    logits = layers.lm_head(params["embed"], x, cfg)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Serving cache
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Cache:
+    k: Any            # (L, B, Smax, K, dh) or None
+    v: Any
+    ssm: Any          # (L, B, H, P, N) or None
+    conv: Any         # (L, B, k-1, ch) or None
+    xk: Any           # (L, B, Senc, K, dh) or None (encdec)
+    xv: Any
+    length: Any       # int32 scalar — tokens already in cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> Cache:
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    cd = cfg.kvdtype
+    k = v = ssm = conv = xk = xv = None
+    if cfg.has_attention:
+        k = jnp.zeros((L, batch, max_seq, K, dh), cd)
+        v = jnp.zeros((L, batch, max_seq, K, dh), cd)
+    if cfg.has_ssm:
+        (ss, cs) = ssm_mod.ssm_state_shapes(cfg, batch)
+        ssm = jnp.zeros((L,) + ss, jnp.float32)
+        conv = jnp.zeros((L,) + cs, cd)
+    if cfg.family == "encdec":
+        xk = jnp.zeros((L, batch, enc_len, K, dh), cd)
+        xv = jnp.zeros((L, batch, enc_len, K, dh), cd)
+    return Cache(k, v, ssm, conv, xk, xv, jnp.zeros((), jnp.int32))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   enc_len: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, enc_len))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
+    """One-token decode.  tokens: (B, 1) int32.  Returns (logits, cache)."""
+    B = tokens.shape[0]
+    pos = cache.length
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
+
+    masks = None
+    kv = None
+    if cfg.has_attention:
+        Smax = cache.k.shape[2]
+        kpos = jnp.arange(Smax)[None, :]
+        m_causal = kpos <= pos
+        m = m_causal
+        if cfg.sliding_window:
+            m = m_causal & (kpos > pos - cfg.sliding_window)
+        masks = (m[:, None, None, :] if cfg.sliding_window else
+                 m_causal[:, None, None, :],
+                 m_causal[:, None, None, :])
+        kv = (cache.k, cache.v)
+    ssm_states = (cache.ssm, cache.conv) if cfg.has_ssm else None
+    xkv = (cache.xk, cache.xv) if cfg.family == "encdec" else None
+
+    nd = cfg.n_dense_layers if cfg.is_moe else 0
+    ys_all = {}
+    if nd:
+        kv_d = jax.tree.map(lambda a: a[:nd], kv) if kv is not None else None
+        x, _, ys = _scan_blocks(params["blocks_dense"], x, cfg, masks=masks,
+                                positions=positions, layer_offset=0, n=nd,
+                                kv=kv_d, cache_pos=pos,
+                                ssm_states=jax.tree.map(
+                                    lambda a: a[:nd], ssm_states)
+                                if ssm_states else None)
+        ys_all["dense"] = ys
+    kv_m = jax.tree.map(lambda a: a[nd:], kv) if kv is not None else None
+    x, _, ys = _scan_blocks(
+        params["blocks"], x, cfg, masks=masks, positions=positions,
+        layer_offset=nd, n=cfg.n_layers - nd, kv=kv_m, cache_pos=pos,
+        ssm_states=jax.tree.map(lambda a: a[nd:], ssm_states)
+        if ssm_states else None,
+        xkv=xkv)
+    ys_all["main"] = ys
+
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.lm_head(params["embed"], x, cfg)
+
+    def _cat(name, idx):
+        parts = []
+        if nd and name in ys_all["dense"]:
+            parts.append(ys_all["dense"][name][idx])
+        if name in ys_all["main"]:
+            parts.append(ys_all["main"][name][idx])
+        return jnp.concatenate(parts, 0) if parts else None
+
+    new_cache = Cache(
+        k=_cat("kv", 0) if cfg.has_attention else None,
+        v=_cat("kv", 1) if cfg.has_attention else None,
+        ssm=_cat("ssm", 0) if cfg.has_ssm else None,
+        conv=_cat("ssm", 1) if cfg.has_ssm else None,
+        xk=cache.xk, xv=cache.xv,
+        length=cache.length + 1)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int,
+            frontend_emb=None):
+    """Run the prompt through the model, building the cache."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq,
+                       enc_len=frontend_emb.shape[1]
+                       if cfg.family == "encdec" else 0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
+    xkv = None
+    if cfg.family == "encdec":
+        enc_out = _encoder_forward(params, cfg, frontend_emb)
+        xkv = _cross_kvs(params, cfg, enc_out)
+    m_causal = layers.causal_mask(S, S)
+    m_window = layers.causal_mask(S, S, window=cfg.sliding_window) \
+        if cfg.sliding_window else m_causal
+    masks = (m_window if cfg.sliding_window else m_causal, m_causal)
+    nd = cfg.n_dense_layers if cfg.is_moe else 0
+    ys_all = {}
+    if nd:
+        x, _, ys = _scan_blocks(params["blocks_dense"], x, cfg, masks=masks,
+                                positions=positions, layer_offset=0, n=nd)
+        ys_all["dense"] = ys
+    x, _, ys = _scan_blocks(params["blocks"], x, cfg, masks=masks,
+                            positions=positions, layer_offset=nd,
+                            n=cfg.n_layers - nd, xkv=xkv)
+    ys_all["main"] = ys
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.lm_head(params["embed"], x[:, -1:], cfg)
+
+    def _cat(name, idx):
+        parts = []
+        if nd and name in ys_all.get("dense", {}):
+            parts.append(ys_all["dense"][name][idx])
+        if name in ys_all["main"]:
+            parts.append(ys_all["main"][name][idx])
+        return jnp.concatenate(parts, 0) if parts else None
+
+    if cfg.has_attention:
+        knew, vnew = _cat("kv", 0), _cat("kv", 1)
+        cache.k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, knew.astype(cache.k.dtype), 0, axis=2)
+        cache.v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, vnew.astype(cache.v.dtype), 0, axis=2)
+    if cfg.has_ssm:
+        cache.ssm = _cat("ssm", 0)
+        cache.conv = _cat("ssm", 1)
+    if cfg.family == "encdec" and xkv is not None:
+        cache.xk, cache.xv = xkv
+    cache.length = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, frontend_emb=None,
+            remat: bool = False, aux_weight: float = 0.01):
+    """Causal LM cross-entropy with MoE aux losses."""
+    logits, aux = forward(params, cfg, tokens, frontend_emb, remat=remat)
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(ll, safe[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    loss = loss + aux_weight * (aux["moe_lb"] + 1e-3 * aux["moe_z"])
+    return loss, {"lm_loss": loss, **aux}

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked, with O(1) decode.
+
+Implements the SSD algorithm of arXiv:2405.21060: within-chunk quadratic
+(attention-like) term + inter-chunk state recurrence.  The chunked scan is
+the perf-critical inner loop; ``kernels/ssd_scan`` provides the Pallas TPU
+version of the same contract, this module is the jnp reference used on CPU
+and by the dry-run.
+
+Shapes: d_inner = expand*d_model, H = d_inner/d_ssm_head heads of size P,
+state size N, single B/C group shared across heads (n_groups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.d_inner_ssm
+    P = cfg.d_ssm_head
+    H = d_in // P
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def ssm_init(key, cfg: ModelConfig) -> layers.ParamBundle:
+    """Projections are kept in shard-ALIGNED groups: (z|x) both live on the
+    TP-sharded ssm_in axis (split offset d_in is a multiple of the shard),
+    while the small B/C/dt block is replicated.  A single fused projection
+    splits at offsets that cross shard boundaries and GSPMD repairs every
+    split with collective-permutes — 6.2e11 B/chip on mamba2 train_4k
+    (§Perf E1)."""
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    items = [
+        ("w_zx", layers._dense_init(
+            ks[0], (d, 2 * d_in), ("embed", "ssm_in"), cfg.pdtype)),
+        ("w_bcdt", layers._dense_init(
+            ks[3], (d, 2 * N + H), ("embed", "ssm_small"), cfg.pdtype)),
+        ("conv_w", layers._dense_init(
+            ks[1], (cfg.ssm_conv, d_in), ("conv", "ssm_in"), cfg.pdtype,
+            scale=1.0 / np.sqrt(cfg.ssm_conv))),
+        ("conv_b", layers._zeros_init((d_in,), ("ssm_in",), cfg.pdtype)),
+        ("conv_w_bc", layers._dense_init(
+            ks[4], (cfg.ssm_conv, 2 * N), ("conv", "ssm_small"), cfg.pdtype,
+            scale=1.0 / np.sqrt(cfg.ssm_conv))),
+        ("conv_b_bc", layers._zeros_init((2 * N,), ("ssm_small",),
+                                         cfg.pdtype)),
+        ("a_log", layers.ParamBundle(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+            ("ssm_heads",))),
+        ("dt_bias", layers._zeros_init((H,), ("ssm_heads",), jnp.float32)),
+        ("d_skip", layers._ones_init((H,), ("ssm_heads",), jnp.float32)),
+        ("norm", layers._ones_init((d_in,), ("ssm_in",), cfg.pdtype)),
+        ("w_out", layers._dense_init(ks[2], (d_in, d), ("ssm_in", "embed"),
+                                     cfg.pdtype)),
+    ]
+    return layers._merge(*items)
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    d_in, H, P, N = ssm_dims(cfg)
+    cd = cfg.cdtype
+    zx = jnp.einsum("bsd,dk->bsk", x, p["w_zx"].astype(cd))
+    z, xs = jnp.split(zx, [d_in], axis=-1)     # shard-aligned split
+    bcdt = jnp.einsum("bsd,dk->bsk", x, p["w_bcdt"].astype(cd))
+    bc, dt = jnp.split(bcdt, [2 * N], axis=-1)  # replicated, free
+    return z, xs, bc, dt
+
+
+def _causal_conv(xbc, w, b, cfg: ModelConfig, conv_state=None):
+    """Depthwise causal conv (applied per shard-aligned channel group).
+
+    conv_state: (B, k-1, ch) trailing context for decode.  Returns
+    (out, new_conv_state)."""
+    k = cfg.ssm_conv
+    w = w.astype(xbc.dtype)                 # (k, ch)
+    if conv_state is not None:
+        buf = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        buf = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(buf[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    out = jax.nn.silu(out + b.astype(xbc.dtype))
+    new_state = buf[:, -(k - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(x, b, c, la, dt, cfg: ModelConfig, init_state=None):
+    """SSD core.  x:(B,S,H,P) b,c:(B,S,N) la:(B,S,H) log-decay dt:(B,S,H).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = b.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+    xq = x.reshape(Bsz, nc, Q, H, P)
+    bq = b.reshape(Bsz, nc, Q, N)
+    cq = c.reshape(Bsz, nc, Q, N)
+    laq = la.reshape(Bsz, nc, Q, H)
+    dtq = dt.reshape(Bsz, nc, Q, H)
+
+    cum = jnp.cumsum(laq, axis=2)                        # (B,nc,Q,H)
+    # within-chunk (attention-like) term.  Valid (lower-triangle) entries
+    # always have li <= 0; clamping inside exp() keeps the masked upper
+    # triangle finite so the where() cotangent never sees 0 * inf = NaN.
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None],
+                  jnp.exp(jnp.minimum(li, 0.0)), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cq, bq)
+    w = scores[..., None] * L * dtq[:, :, None, :, :]    # (B,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w.astype(x.dtype), xq)
+
+    # chunk state contributions: decay from position k to chunk end
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)
+    zc = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                    bq, (dec_end * dtq).astype(x.dtype), xq)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def scan_fn(s, inp):
+        z_c, dk = inp
+        s_new = s * dk[:, :, None, None] + z_c
+        return s_new, s
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((Bsz, H, P, N), x.dtype)
+    final, s_prev = jax.lax.scan(
+        scan_fn, s0,
+        (zc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         cq, s_prev, jnp.exp(cum).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_apply(p, x, cfg: ModelConfig, *, state=None, conv_state=None,
+              return_state: bool = False):
+    """Full Mamba2 layer.  x: (B,S,d).  With ``state``/``conv_state`` given
+    (decode), S must be 1 and the recurrence is applied directly."""
+    d_in, H, P, N = ssm_dims(cfg)
+    z, xs_raw, bc_raw, dt_raw = _split_proj(p, x, cfg)
+    cs_x = cs_bc = None
+    if conv_state is not None:
+        cs_x, cs_bc = (conv_state[..., :d_in], conv_state[..., d_in:])
+    xs, new_conv_x = _causal_conv(xs_raw, p["conv_w"], p["conv_b"], cfg,
+                                  cs_x)
+    bc, new_conv_bc = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"],
+                                   cfg, cs_bc)
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-1)
+    b, c = jnp.split(bc, [N], axis=-1)
+    Bsz, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,H)
+    a = -jnp.exp(p["a_log"])                              # (H,)
+    la = dt * a                                           # log decay
+
+    if state is not None:
+        # O(1) decode: s' = s*exp(la) + dt * x  (outer) B
+        dec = jnp.exp(la[:, 0])[:, :, None, None]         # (B,H,1,1)
+        upd = jnp.einsum("bhp,bn->bhpn", (dt[:, 0, :, None]
+                                          * xs[:, 0].astype(jnp.float32)),
+                         b[:, 0].astype(jnp.float32))
+        new_state = state * dec + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state,
+                       c[:, 0].astype(jnp.float32))[:, None]
+    else:
+        y, new_state = ssd_chunked(xs, b, c, la.astype(x.dtype),
+                                   dt.astype(x.dtype), cfg)
+        y = y.astype(jnp.float32)
+
+    y = y + p["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMS norm over d_inner
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt((y32 ** 2).mean(-1, keepdims=True)
+                             + cfg.norm_eps)).astype(x.dtype)
+    y = y * p["norm"].astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(cfg.cdtype))
+    if return_state:
+        return out, (new_state, new_conv)
+    return out
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int):
+    d_in, H, P, N = ssm_dims(cfg)
+    return ((batch, H, P, N), (batch, cfg.ssm_conv - 1, d_in + 2 * N))

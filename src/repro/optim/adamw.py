@@ -1,0 +1,194 @@
+"""Optimizers: AdamW (mixed-precision, ZeRO-friendly) and Adafactor
+(factored second moment, for trillion-parameter MoE where full AdamW state
+does not fit the pod).
+
+States live in the same sharding as their parameters (which are themselves
+FSDP-sharded under the default rules), so optimizer state is automatically
+ZeRO-3 partitioned — no extra machinery needed under pjit.  All state trees
+are None-free so pytree structures always match the gradient tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"  # bfloat16 halves AdamW state memory
+    # adafactor
+    factored_min: int = 128        # factor 2nd moment for dims >= this
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cosine)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any       # fp32 master copy (always present)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any           # row 2nd-moment factor (full moment if not factored)
+    vc: Any           # col factor ((1,) dummy if not factored)
+    master: Any
+
+
+def _factorable(p, cfg: OptConfig):
+    return (p.ndim >= 2 and p.shape[-1] >= cfg.factored_min
+            and p.shape[-2] >= cfg.factored_min)
+
+
+def adamw_init(params, cfg: OptConfig) -> AdamWState:
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(lambda p: p.astype(jnp.float32), params))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptConfig):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    md = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step)
+        vh = v / (1 - cfg.b2 ** step)
+        new = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                             + cfg.weight_decay * master)
+        return new.astype(p.dtype), m.astype(md), v.astype(md), new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    res = [upd(g, m, v, p, ms) for g, m, v, p, ms in zip(
+        flat_g, treedef.flatten_up_to(state.m),
+        treedef.flatten_up_to(state.v), treedef.flatten_up_to(params),
+        treedef.flatten_up_to(state.master))]
+    new_p = treedef.unflatten([r[0] for r in res])
+    st = AdamWState(step,
+                    treedef.unflatten([r[1] for r in res]),
+                    treedef.unflatten([r[2] for r in res]),
+                    treedef.unflatten([r[3] for r in res]))
+    return new_p, st, {"grad_norm": gnorm, "lr": lr}
+
+
+def adafactor_init(params, cfg: OptConfig) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1] if _factorable(p, cfg) else p.shape,
+                         jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:]
+                         if _factorable(p, cfg) else (1,), jnp.float32)
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(vr, params),
+                          jax.tree.map(vc, params),
+                          jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, cfg: OptConfig):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(g, vr, vc, p, master):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if _factorable(p, cfg):
+            vr_n = decay * vr + (1 - decay) * g2.mean(-1)
+            vc_n = decay * vc + (1 - decay) * g2.mean(-2)
+            denom = (vr_n[..., None] * vc_n[..., None, :]
+                     / jnp.maximum(vr_n.mean(-1, keepdims=True)[..., None],
+                                   1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr_n = decay * vr + (1 - decay) * g2
+            vc_n = vc
+            u = g * jax.lax.rsqrt(vr_n + 1e-30)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)   # Adafactor update clipping
+        u = u / jnp.maximum(1.0, rms)
+        new = master - lr * (u + cfg.weight_decay * master)
+        return new.astype(p.dtype), vr_n, vc_n, new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    res = [upd(g, vr, vc, p, ms) for g, vr, vc, p, ms in zip(
+        flat_g, treedef.flatten_up_to(state.vr),
+        treedef.flatten_up_to(state.vc), treedef.flatten_up_to(params),
+        treedef.flatten_up_to(state.master))]
+    new_p = treedef.unflatten([r[0] for r in res])
+    st = AdafactorState(step,
+                        treedef.unflatten([r[1] for r in res]),
+                        treedef.unflatten([r[2] for r in res]),
+                        treedef.unflatten([r[3] for r in res]))
+    return new_p, st, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_init(params, cfg: OptConfig):
+    return adamw_init(params, cfg) if cfg.kind == "adamw" \
+        else adafactor_init(params, cfg)
+
+
+def opt_update(grads, state, params, cfg: OptConfig):
+    return adamw_update(grads, state, params, cfg) if cfg.kind == "adamw" \
+        else adafactor_update(grads, state, params, cfg)
+
+
+def state_shardings(state, param_shardings, mesh):
+    """Optimizer state inherits its parameter's sharding; scalars and
+    factored moments that lost axes fall back sensibly."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+
+    def like(s_leaf, p_shard):
+        if s_leaf.ndim == 0 or s_leaf.shape == (1,):
+            return rep
+        spec = p_shard.spec
+        if len(spec) == s_leaf.ndim:
+            return p_shard
+        if len(spec) > s_leaf.ndim:   # factored moment: drop trailing axes
+            return NamedSharding(mesh, P(*spec[:s_leaf.ndim]))
+        return rep
+
+    def map_like(leaf_tree):
+        return jax.tree.map(like, leaf_tree, param_shardings)
+
+    if isinstance(state, AdamWState):
+        return AdamWState(rep, map_like(state.m), map_like(state.v),
+                          map_like(state.master))
+    return AdafactorState(rep, map_like(state.vr), map_like(state.vc),
+                          map_like(state.master))

@@ -1,0 +1,42 @@
+"""Serving steps: prefill (build cache) and decode (one token, batched).
+
+``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
+token against a KV/SSM cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache: lm.Cache, tokens):
+        """tokens: (B, 1) -> (next_token (B,1), logits, cache)."""
+        logits, cache = lm.decode_step(params, cfg, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, tokens, frontend=None):
+        return lm.prefill(params, cfg, tokens, max_seq=max_seq,
+                          frontend_emb=frontend)
+    return prefill_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, n_tokens: int,
+                    max_seq: int, frontend=None):
+    """Reference generation loop (used by examples + tests)."""
+    logits, cache = lm.prefill(params, cfg, prompt, max_seq=max_seq,
+                               frontend_emb=frontend)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    step = jax.jit(make_decode_step(cfg))
+    for _ in range(n_tokens - 1):
+        tok, _, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

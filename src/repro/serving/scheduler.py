@@ -1,0 +1,147 @@
+"""MARS request scheduler — the paper's architecture as a serving frontend.
+
+This is the *online* software rendering of MARS (the kernels are the bulk
+rendering).  Incoming inference requests are the interleaved streams; the
+"physical page" is the KV-prefix block (requests sharing a prompt prefix
+hit the same cache pages and the same expert routing neighborhoods).  The
+three paper structures map 1:1:
+
+  RequestQ       -> bounded request buffer (``request_q`` entries)
+  PhyPageList    -> dict keyed by prefix-block hash, holding per-page FIFO
+                    lists (set-associativity bounds tracked pages, exactly
+                    like the 2-way SRAM table)
+  PhyPageOrderQ  -> pages drained in first-arrival order -> bounded delay
+                    (no starvation) while batches stay page-coherent
+
+``schedule_batch`` pops up to ``batch_size`` requests page-major — the
+back-to-back CAS drain.  With MARS off it pops FIFO — the baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict, deque
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: tuple           # token tuple (hashable)
+    arrival: float = 0.0
+    prefix_len: int = 64    # block size for page hashing
+    max_new: int = 16
+
+    @property
+    def page(self) -> str:
+        block = self.prompt[:self.prefix_len]
+        return hashlib.sha1(repr(block).encode()).hexdigest()[:12]
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    scheduled: int = 0
+    batches: int = 0
+    page_switches: int = 0
+    stall_rejects: int = 0
+    wait_sum: float = 0.0
+
+    @property
+    def pages_per_batch(self) -> float:
+        return self.page_switches / max(self.batches, 1)
+
+    @property
+    def mean_wait(self) -> float:
+        return self.wait_sum / max(self.scheduled, 1)
+
+
+class MarsScheduler:
+    """Bounded-lookahead, page-grouping, oldest-page-first batcher."""
+
+    def __init__(self, request_q: int = 512, page_entries: int = 128,
+                 ways: int = 2, mars: bool = True):
+        self.request_q = request_q
+        self.page_entries = page_entries
+        self.nsets = page_entries // ways
+        self.ways = ways
+        self.mars = mars
+        self.pages: "OrderedDict[str, deque]" = OrderedDict()
+        self.setload: dict[int, set] = {}
+        self.fifo: deque = deque()
+        self.total = 0
+        self.stats = SchedulerStats()
+
+    def _set_of(self, page: str) -> int:
+        return int(page, 16) % self.nsets
+
+    def offer(self, req: Request) -> bool:
+        """Insert (paper Fig 5).  False = backpressure to the client."""
+        if self.total >= self.request_q:
+            self.stats.stall_rejects += 1
+            return False
+        page = req.page
+        if page not in self.pages:
+            s = self._set_of(page)
+            ways = self.setload.setdefault(s, set())
+            if len(ways) >= self.ways:
+                self.stats.stall_rejects += 1
+                return False
+            ways.add(page)
+            self.pages[page] = deque()
+        self.pages[page].append(req)
+        self.fifo.append(req)
+        self.total += 1
+        return True
+
+    def schedule_batch(self, batch_size: int,
+                       now: float | None = None) -> list:
+        """Forward (paper Fig 6): drain oldest pages to exhaustion."""
+        now = time.time() if now is None else now
+        out: list[Request] = []
+        if not self.mars:
+            while self.fifo and len(out) < batch_size:
+                r = self.fifo.popleft()
+                q = self.pages.get(r.page)
+                if q and r in q:
+                    q.remove(r)
+                    if not q:
+                        self._drop_page(r.page)
+                    out.append(r)
+                    self.total -= 1
+        else:
+            last_page = None
+            while self.pages and len(out) < batch_size:
+                page = next(iter(self.pages))          # oldest allocation
+                q = self.pages[page]
+                if page != last_page:
+                    self.stats.page_switches += 1
+                    last_page = page
+                while q and len(out) < batch_size:
+                    r = q.popleft()
+                    try:
+                        self.fifo.remove(r)
+                    except ValueError:
+                        pass
+                    out.append(r)
+                    self.total -= 1
+                if not q:
+                    self._drop_page(page)
+        self.stats.scheduled += len(out)
+        self.stats.batches += 1 if out else 0
+        self.stats.wait_sum += sum(now - r.arrival for r in out)
+        return out
+
+    def _drop_page(self, page: str) -> None:
+        self.pages.pop(page, None)
+        self.setload.get(self._set_of(page), set()).discard(page)
+
+    def __len__(self) -> int:
+        return self.total
+
+
+def unique_prefix_blocks(batch: list) -> int:
+    """Distinct KV prefix blocks a batch touches (the serving CAS/ACT)."""
+    return len({r.page for r in batch})

@@ -1,0 +1,38 @@
+"""Ambient mesh registry.
+
+Layers that need explicit collectives (MoE dispatch via shard_map) look up
+the active mesh here; single-device tests never set one and get the local
+fallback path.  ``launch/`` sets the mesh for real runs and dry-runs.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """All mesh axes used for data parallelism (pod+data when multi-pod)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh: jax.sharding.Mesh) -> str:
+    return "model"
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[jax.sharding.Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev

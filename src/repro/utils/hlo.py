@@ -1,0 +1,137 @@
+"""Post-optimization HLO analysis: collective-traffic accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but not collective
+traffic; we parse the optimized HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[4,128,256]{2,1,0}  or  f32[] or (f32[2], bf16[3,4])
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CALLEE = re.compile(r"(?:to_apply|condition|body)=%?([\w.\-]+)"
+                     r"|calls=%?([\w.\-]+)")
+
+
+def _execution_counts(hlo_text: str) -> dict:
+    """Per-computation execution multiplier from the call graph.
+
+    While bodies multiply by their ``known_trip_count`` annotation (the
+    layer scan); everything else propagates its caller's count.  Without
+    this, loop-body collectives/flops are counted once instead of x L.
+    """
+    comp_of_line: list[tuple[str, str]] = []
+    cur = "__entry__"
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and ("{" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        comp_of_line.append((cur, line))
+
+    # edges: caller -> (callee, factor)
+    edges = defaultdict(list)
+    for comp, line in comp_of_line:
+        if "=" not in line:
+            continue
+        trip = 1
+        tm = _TRIP.search(line)
+        body = _BODY.search(line)
+        if tm and body:
+            trip = int(tm.group(1))
+        for m in _CALLEE.finditer(line):
+            name = m.group(1) or m.group(2)
+            factor = trip if (body and name == body.group(1)) else 1
+            edges[comp].append((name, factor))
+
+    counts = defaultdict(int)
+    counts[entry or "__entry__"] = 1
+    # propagate (call graph is a DAG; a few passes reach fixpoint)
+    for _ in range(12):
+        changed = False
+        new = defaultdict(int, {entry or "__entry__": 1})
+        for caller, outs in edges.items():
+            c = counts.get(caller, 0)
+            if not c:
+                continue
+            for callee, factor in outs:
+                new[callee] += c * factor
+        new[entry or "__entry__"] = 1
+        if dict(new) != dict(counts):
+            counts = new
+            changed = True
+        if not changed:
+            break
+    return dict(counts), (entry or "__entry__")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum *output* shape bytes per collective kind over the module,
+    weighting each instruction by its computation's execution count
+    (while-loop trip counts included).
+
+    Returns {kind: bytes} plus "total" and per-kind op counts in
+    "{kind}_count".
+    """
+    counts, entry = _execution_counts(hlo_text)
+    out: dict = defaultdict(int)
+    cur = entry
+    for line in hlo_text.splitlines():
+        hm = _COMP_HDR.match(line.strip())
+        if hm and ("{" in line or line.rstrip().endswith("{")):
+            cur = hm.group(1)
+            continue
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (\S+?)\(", s)
+        if not m:
+            continue
+        shape_txt, opname = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-") \
+                    or opname.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # "-start" variants have matching "-done"; count starts only
+        if opname.endswith("-done"):
+            continue
+        mult = counts.get(cur, 1) or 1
+        b = _shape_bytes(shape_txt) * mult
+        out[kind] += b
+        out[f"{kind}_count"] += mult
+    out["total"] = sum(out[c] for c in _COLLECTIVES if c in out)
+    return dict(out)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+train step on CPU, shape and NaN checks, decode-vs-forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+ARCHS = configs.all_archs()
+
+
+def _inputs(cfg, B=2, S=16):
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    fe = None
+    if cfg.frontend:
+        fe = jax.random.normal(jax.random.key(2),
+                               (B, cfg.frontend_seq, cfg.d_model)) * 0.02
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = configs.get_smoke(arch)
+    params = lm.init(cfg, jax.random.key(0)).params
+    tokens, fe = _inputs(cfg)
+    logits, aux = lm.forward(params, cfg, tokens, fe)
+    assert logits.shape == (*tokens.shape, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    if cfg.is_moe:
+        assert float(aux["moe_lb"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss(arch):
+    cfg = configs.get_smoke(arch)
+    params = lm.init(cfg, jax.random.key(0)).params
+    tokens, fe = _inputs(cfg)
+
+    @jax.jit
+    def step(p):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: lm.loss_fn(pp, cfg, tokens, tokens, fe),
+            has_aux=True)(p)
+        p = jax.tree.map(
+            lambda w, gw: (w.astype(jnp.float32)
+                           - 0.05 * gw.astype(jnp.float32)).astype(w.dtype),
+            p, g)
+        return loss, p
+
+    l0, params = step(params)
+    for _ in range(3):
+        l1, params = step(params)
+    assert not bool(jnp.isnan(l1))
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill + single-token decode must reproduce teacher-forced logits."""
+    cfg = configs.get_smoke(arch)
+    if cfg.family == "vlm":
+        pytest.skip("vlm prefix path exercised in forward test")
+    params = lm.init(cfg, jax.random.key(0)).params
+    tokens, fe = _inputs(cfg, B=1, S=8)
+    full, _ = lm.forward(params, cfg, tokens, fe)
+    _, cache = lm.prefill(params, cfg, tokens[:, :4], max_seq=16,
+                          frontend_emb=fe)
+    lg = None
+    for t in range(4, 8):
+        lg, cache = lm.decode_step(params, cfg, tokens[:, t:t + 1], cache)
+    # after feeding tokens 4..7 the step logits predict token 8 == full[:,7]
+    np.testing.assert_allclose(np.asarray(lg[0, 0]),
+                               np.asarray(full[0, 7]), rtol=0.05, atol=0.05)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_analytic(arch):
+    cfg = configs.get_smoke(arch)
+    params = lm.init(cfg, jax.random.key(0)).params
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    approx = cfg.n_params()
+    assert abs(actual - approx) / actual < 0.15, (actual, approx)
+
+
+def test_full_configs_param_counts():
+    """Full (non-smoke) configs must land near their published sizes."""
+    expect = {
+        "mamba2_370m": (0.25e9, 0.6e9),
+        "deepseek_coder_33b": (30e9, 36e9),
+        "qwen1_5_0_5b": (0.4e9, 0.7e9),
+        "starcoder2_7b": (6e9, 8.5e9),
+        "phi3_medium_14b": (12e9, 16e9),
+        "arctic_480b": (400e9, 560e9),
+        "kimi_k2_1t_a32b": (0.85e12, 1.25e12),
+        "whisper_base": (0.05e9, 0.11e9),
+        "paligemma_3b": (2e9, 3.5e9),
+        "hymba_1_5b": (1.0e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).n_params()
+        assert lo <= n <= hi, (arch, f"{n/1e9:.2f}B not in [{lo/1e9}-{hi/1e9}]")
+
+
+def test_kimi_active_params():
+    cfg = configs.get("kimi_k2_1t_a32b")
+    active = cfg.n_active_params()
+    assert 20e9 <= active <= 45e9, f"{active/1e9:.1f}B active"

@@ -1,0 +1,69 @@
+"""DRAM timing model: analytical sanity anchors."""
+import numpy as np
+import pytest
+
+from repro.core import dram
+
+
+def test_sequential_stream_saturates_bus():
+    a = np.arange(16384, dtype=np.int32)
+    r = dram.simulate(a)
+    assert r.bus_utilization > 0.95
+    assert r.cas_per_act > 16  # full rows reused
+
+
+def test_random_stream_is_activate_bound():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 24, 16384).astype(np.int32)
+    r = dram.simulate(a)
+    assert r.cas_per_act < 1.3
+    # tFAW-limited ceiling: 4 ACT/40clk * 4clk data = 0.4 of peak
+    assert r.bus_utilization < 0.45
+
+
+@pytest.mark.parametrize("runlen", [4, 16, 64])
+def test_run_length_monotonicity(runlen):
+    rng = np.random.default_rng(1)
+    pages = rng.integers(0, 1 << 18, 8192 // runlen).astype(np.int64)
+    a = (pages[:, None] * 64 + np.arange(runlen)).reshape(-1).astype(np.int32)
+    r = dram.simulate(a)
+    # per-channel CA is about half the run length (channel interleave)
+    assert r.cas_per_act == pytest.approx(runlen / 2, rel=0.3)
+
+
+def test_longer_runs_never_slower():
+    rng = np.random.default_rng(2)
+    utils = []
+    for runlen in (2, 8, 32):
+        pages = rng.integers(0, 1 << 18, 8192 // runlen).astype(np.int64)
+        a = (pages[:, None] * 64 + np.arange(runlen)).reshape(-1)
+        utils.append(dram.simulate(a.astype(np.int32)).bus_utilization)
+    assert utils[0] <= utils[1] <= utils[2] + 0.02
+
+
+def test_write_read_turnaround_costs():
+    a = np.arange(8192, dtype=np.int32)
+    pure = dram.simulate(a, is_write=np.zeros(8192, bool))
+    alternating = dram.simulate(a, is_write=(np.arange(8192) % 2 == 0))
+    assert alternating.achieved_gbps < pure.achieved_gbps * 0.55
+
+
+def test_channel_split_is_conserving():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 1 << 20, 4096).astype(np.int32)
+    cfg = dram.DramConfig()
+    ch, local = dram.split_channels(a, cfg)
+    assert len(ch) == len(a)
+    assert set(np.unique(ch)) <= {0, 1}
+    # map is injective: (channel, local) identifies the line
+    key = ch.astype(np.int64) << 40 | local
+    assert len(np.unique(key)) == len(np.unique(a))
+
+
+def test_bank_hash_spreads_power_of_two_strides():
+    import jax.numpy as jnp
+    cfg = dram.DramConfig()
+    for stride in (8, 64, 512):
+        local = jnp.arange(64) * 32 * stride
+        _, bank, _ = dram._decode(local, cfg)
+        assert len(np.unique(np.asarray(bank))) >= 6, stride

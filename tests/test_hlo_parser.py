@@ -1,0 +1,63 @@
+"""HLO collective-accounting parser: synthetic-module ground truth."""
+import numpy as np
+
+from repro.utils import hlo
+
+_MODULE = """
+HloModule jit_step, entry_computation_layout={()->()}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%loop_body.2 (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg = (s32[], f32[128,256]) parameter(0)
+  %x = f32[128,256] get-tuple-element(%arg), index=1
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add.1
+  ROOT %t = (s32[], f32[128,256]) tuple(%x, %ar)
+}
+
+%loop_cond.3 (arg: (s32[], f32[128,256])) -> pred[] {
+  %arg = (s32[], f32[128,256]) parameter(0)
+  ROOT %p = pred[] constant(false)
+}
+
+ENTRY %main.4 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256] parameter(0)
+  %ag = f32[256,256]{1,0} all-gather(%p0), dimensions={0}
+  %init = (s32[], f32[128,256]) tuple(s32[] constant(0), %p0)
+  %w = (s32[], f32[128,256]) while(%init), condition=%loop_cond.3, body=%loop_body.2, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_loop_body_collectives_weighted_by_trip_count():
+    res = hlo.collective_bytes(_MODULE)
+    # all-gather in entry: 256*256*4 bytes, once
+    assert res["all-gather"] == 256 * 256 * 4
+    assert res["all-gather_count"] == 1
+    # all-reduce inside the while body: 128*256*4 bytes x 10 trips
+    assert res["all-reduce"] == 128 * 256 * 4 * 10
+    assert res["all-reduce_count"] == 10
+    assert res["total"] == res["all-gather"] + res["all-reduce"]
+
+
+def test_shape_bytes_tuple_and_dtypes():
+    assert hlo._shape_bytes("bf16[4,8]") == 64
+    assert hlo._shape_bytes("(f32[2,2], s8[16])") == 32
+    assert hlo._shape_bytes("pred[]") == 1   # scalar: dims empty
+
+
+def test_execution_counts_entry_is_one():
+    counts, entry = hlo._execution_counts(_MODULE)
+    assert counts[entry] == 1
+    assert counts["loop_body.2"] == 10
+
+
+def test_no_collectives_module():
+    res = hlo.collective_bytes("ENTRY %m () -> f32[] {\n"
+                               "  ROOT %c = f32[] constant(1)\n}")
+    assert res["total"] == 0

@@ -1,0 +1,57 @@
+"""End-to-end reproduction checks against the paper's headline claims.
+
+Paper (Section 4): MARS improves achieved memory bandwidth by ~11% and
+CAS/ACT by ~69% on average over WL1-WL5; WL1 and WL5 improve CAS/ACT by
+more than 2x.  Our synthetic streams are idealized relative to the paper's
+(no cache feedback loop), so we assert the same *direction and magnitude
+class*: positive BW uplift on every workload, mean BW uplift in [8%, 60%],
+mean CAS/ACT uplift in [50%, 200%], and >2x CAS/ACT on WL1/WL5.
+"""
+import numpy as np
+import pytest
+
+from repro.core import experiment, streams
+
+RPC = 128  # keep CI fast; benchmarks use 256
+
+
+@pytest.fixture(scope="module")
+def results():
+    return experiment.run_all(reqs_per_core=RPC)
+
+
+def test_bw_uplift_every_workload(results):
+    for r in results:
+        assert r.bw_uplift > 0.0, (r.name, r.bw_uplift)
+
+
+def test_mean_bw_uplift_magnitude(results):
+    s = experiment.summarize(results)
+    assert 0.08 <= s["mean_bw_uplift"] <= 0.60, s["mean_bw_uplift"]
+
+
+def test_mean_cas_act_uplift_magnitude(results):
+    s = experiment.summarize(results)
+    assert 0.50 <= s["mean_cas_act_uplift"] <= 2.00, s["mean_cas_act_uplift"]
+
+
+def test_wl1_wl5_cas_act_over_2x(results):
+    by = {r.name: r for r in results}
+    assert by["WL1"].with_mars.cas_per_act >= 2.0 * by["WL1"].baseline.cas_per_act
+    assert by["WL5"].with_mars.cas_per_act >= 2.0 * by["WL5"].baseline.cas_per_act
+
+
+def test_locality_lost_through_merging():
+    """Paper Fig 2: locality at source >> locality at GPU boundary, and
+    boundary locality decreases as core count grows."""
+    loc = experiment.locality_experiment(core_counts=(24, 64),
+                                         reqs_per_core=256)
+    w = 512
+    assert loc["single_cache"][w] > 2 * loc["gpu_boundary_24cores"][w]
+    assert loc["gpu_boundary_24cores"][w] > loc["gpu_boundary_64cores"][w]
+
+
+def test_locality_grows_with_window():
+    loc = experiment.locality_experiment(core_counts=(24,), reqs_per_core=256)
+    vals = list(loc["gpu_boundary_24cores"].values())
+    assert all(a <= b + 1e-9 for a, b in zip(vals, vals[1:]))
