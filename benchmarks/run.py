@@ -33,6 +33,11 @@ def main() -> None:
         sections.append(("ablations", ablations.run))
     except ImportError:
         pass
+    try:
+        from benchmarks import kvcache_bench
+        sections.append(("kvcache_bench", kvcache_bench.run))
+    except ImportError:
+        pass
 
     print("name,us_per_call,derived")
     for name, fn in sections:

@@ -1,37 +1,52 @@
-"""Batched serving with the MARS request scheduler + paged KV attention.
+"""Batched serving through the paged KV-cache pool + MARS scheduler.
 
     PYTHONPATH=src python examples/serve_paged.py
 
-Shows both MARS layers of the serving stack:
+All three MARS layers of the serving stack:
   1. the ONLINE scheduler (software RequestQ) grouping requests by KV
-     prefix block, vs FIFO batching;
-  2. the BULK kernel: paged_attention visiting KV pages in page order
-     (validated against its jnp oracle here).
+     prefix block, vs FIFO batching, driving a real smoke model;
+  2. the MEMORY subsystem: continuous batching over the block pool —
+     prefix-shared blocks, MARS-aware placement, copy-on-write forks,
+     pool-capacity admission;
+  3. the BULK kernel: paged_attention reading the pool's block tables
+     (Pallas interpret mode), validated against the dense jnp oracle.
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.paged_attention.paged_attention import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kvcache import BlockPool, PoolConfig
 from repro.launch import serve
+from repro.serve.engine import ServeEngine
+from repro.serving.scheduler import MarsScheduler, Request
 
 # 1. scheduler comparison (runs a real smoke model underneath)
 results = serve.main(["--arch", "qwen1_5_0_5b", "--smoke",
                       "--requests", "48", "--batch", "8"])
 
-# 2. paged attention kernel demo: decode one token for 4 sequences whose
-#    KV lives in 16-entry pages
-B, H, Hkv, D, page, npages = 4, 8, 2, 64, 16, 6
-ks = jax.random.split(jax.random.key(0), 3)
-q = jax.random.normal(ks[0], (B, H, D))
-kp = jax.random.normal(ks[1], (B * npages, page, Hkv, D))
-vp = jax.random.normal(ks[2], (B * npages, page, Hkv, D))
-pt = jnp.arange(B * npages, dtype=jnp.int32).reshape(B, npages)
-lengths = jnp.asarray([90, 64, 17, 96], jnp.int32)
-out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
-ref = paged_attention_ref(q, kp, vp, pt, lengths)
-np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
-                           atol=2e-4)
-print("[example] paged_attention kernel matches oracle "
-      f"(max err {np.abs(np.asarray(out) - np.asarray(ref)).max():.2e})")
+# 2 + 3. continuous batching over the pool, decode via the Pallas kernel
+rng = np.random.default_rng(0)
+prefixes = [tuple(rng.integers(1, 100, 20).tolist()) for _ in range(4)]
+reqs = []
+for i in range(24):
+    reqs.append(Request(rid=i, prompt=prefixes[i % 4]
+                        + tuple(rng.integers(1, 100, 4).tolist()),
+                        arrival=i * 1e-3, max_new=6,
+                        n_samples=3 if i == 0 else 1))  # forks exercise CoW
+
+outs = {}
+for use_kernel in (False, True):
+    pool = BlockPool(PoolConfig(num_blocks=96, block_size=16,
+                                n_kv_heads=2, head_dim=64))
+    eng = ServeEngine(pool, MarsScheduler(pool=pool), max_lanes=6,
+                      use_kernel=use_kernel)
+    outs[use_kernel] = eng.run(reqs)
+    pool.check_invariants()
+    if use_kernel:
+        print(f"[example] paged pool: served={len(outs[use_kernel])} "
+              f"prefix_hits={pool.stats.prefix_hits} "
+              f"cow_copies={pool.stats.cow_copies} "
+              f"evictions={pool.stats.evictions} "
+              f"pool_rejects={eng.scheduler.stats.pool_rejects}")
+
+assert outs[False] == outs[True], "kernel vs oracle serving paths diverged"
+print("[example] paged_attention kernel serving matches dense oracle "
+      f"on {sum(len(v) for v in outs[True].values())} sequences")

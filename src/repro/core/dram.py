@@ -74,6 +74,10 @@ def split_channels(addr: np.ndarray, cfg: DramConfig):
     """Address map: channel striped at 128B; within a channel the local
     line id is contiguous per page (see module docstring)."""
     a = np.asarray(addr, np.int64)
+    if cfg.n_channels & (cfg.n_channels - 1):
+        raise ValueError(
+            f"n_channels must be a power of two, got {cfg.n_channels}: the "
+            "128B channel stripe extracts the channel id as a bit field")
     ch_bits = int(np.log2(cfg.n_channels))
     ch = (a >> 1) & (cfg.n_channels - 1)
     local = ((a >> (1 + ch_bits)) << 1) | (a & 1)

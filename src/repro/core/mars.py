@@ -266,6 +266,9 @@ def mars_reorder(addr: np.ndarray | jnp.ndarray,
     cfg = cfg or MarsConfig()
     addr = np.asarray(addr)
     n = int(addr.shape[0])
+    if n == 0:
+        return np.zeros(0, np.int64), {
+            "stall_events": 0, "total_cycles": 0, "idle_frac": 0.0}
     pages = jnp.asarray(np.asarray(addr, np.int64) >> PAGE_SHIFT, jnp.int32)
     if ports is None:
         ports = np.arange(n) % cfg.n_ports

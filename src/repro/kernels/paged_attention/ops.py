@@ -1,0 +1,72 @@
+"""Pool -> kernel bridge: block tables as paged-attention operands, and the
+kernel's memory-access stream as a DRAM-model trace.
+
+Three views of the same object:
+
+  ``pool_page_tables``   pad per-sequence ``BlockTable``s into the dense
+                         ``(B, n_pages)`` int32 operand the Pallas kernel
+                         scalar-prefetches
+  ``batch_lane_order``   order decode lanes so sequences whose tail blocks
+                         share a DRAM row neighborhood sit adjacent — the
+                         ``reorder.mars_order`` policy applied to the batch
+  ``kv_read_trace``      the 64B-line address stream the paged gather emits
+                         toward memory (per-lane streams interleaved by the
+                         parallel gather), consumable by ``core.dram.simulate``
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.reorder import mars_order
+from repro.core.streams import _round_robin_merge
+from repro.kvcache.placement import row_group_of
+from repro.kvcache.pool import LINES_PER_BLOCK
+
+
+def pool_page_tables(tables: Sequence, pad_to: int | None = None):
+    """(page_tables int32 (B, n_pages), lengths int32 (B,)).  Padding block
+    id 0 is safe: the kernel masks positions >= length."""
+    n_pages = max((len(t.blocks) for t in tables), default=1)
+    n_pages = max(n_pages, pad_to or 1)
+    B = len(tables)
+    pt = np.zeros((B, n_pages), np.int32)
+    lengths = np.zeros(B, np.int32)
+    for i, t in enumerate(tables):
+        pt[i, :len(t.blocks)] = t.blocks
+        lengths[i] = t.num_tokens
+    return pt, lengths
+
+
+def batch_lane_order(tables: Sequence, blocks_per_group: int) -> np.ndarray:
+    """Permutation over batch lanes grouping tail blocks by row neighborhood
+    (first-arrival page order, FIFO within a page — ``mars_order``)."""
+    if not tables:
+        return np.zeros(0, np.int64)
+    groups = np.asarray([
+        row_group_of(t.blocks[-1], blocks_per_group) if t.blocks else -1
+        for t in tables], np.int32)
+    return np.asarray(mars_order(groups))
+
+
+def kv_read_trace(tables: Sequence, *, grant_beats: int = 4,
+                  lines_per_block: int = LINES_PER_BLOCK) -> np.ndarray:
+    """64B-line addresses of one decode step's full KV gather.
+
+    Each lane reads its whole block list sequentially (one block = one 4KB
+    page); lanes run in parallel, so the stream the memory system sees is
+    the round-robin interleave of the per-lane streams — the same
+    multi-stream merge that destroys locality at the paper's GPU boundary.
+    """
+    lanes = []
+    for t in tables:
+        if not t.blocks:
+            continue
+        base = np.asarray(t.blocks, np.int64)[:, None] * lines_per_block
+        lanes.append((base + np.arange(lines_per_block)).reshape(-1)
+                     .astype(np.int32))
+    if not lanes:
+        return np.zeros(0, np.int32)
+    addr, _ = _round_robin_merge(lanes, grant_beats)
+    return addr

@@ -1,0 +1,21 @@
+"""Paged KV-cache subsystem — the memory-management half of MARS serving.
+
+The serving analogue of the paper's memory system, one module per layer:
+
+  pool       fixed-capacity slab allocator over a preallocated KV buffer
+             (free-list + occupancy bitmap, the RequestQ bookkeeping style)
+  placement  MARS-aware block placement: co-scheduled sequences' blocks land
+             in the same DRAM-row neighborhood (bank-parallel, no row thrash)
+  prefix     ref-counted prefix sharing + copy-on-write block tables
+  evict      reclaim of cached (refcount-0) blocks: first-arrival order
+             (the PhyPageOrderQ policy) or LRU
+"""
+from repro.kvcache.evict import EvictionPolicy
+from repro.kvcache.placement import PlacementPolicy, row_group_of
+from repro.kvcache.pool import BlockPool, PoolConfig
+from repro.kvcache.prefix import BlockTable, PrefixCache
+
+__all__ = [
+    "BlockPool", "PoolConfig", "BlockTable", "PrefixCache",
+    "PlacementPolicy", "EvictionPolicy", "row_group_of",
+]

@@ -1,0 +1,33 @@
+"""Eviction of cached (refcount-zero) prefix blocks.
+
+A block whose last reference drops is not necessarily freed: if it holds a
+registered prompt prefix it stays resident so a future request can reuse
+it, exactly like a clean page in a page cache.  When an allocation finds
+the free list short, cached blocks are reclaimed in one of two orders:
+
+  fifo   first-arrival order of the block's allocation — the PhyPageOrderQ
+         policy of the MARS engine (drain the oldest page first), which
+         bounds how long any block can squat in the pool
+  lru    least-recently-used, the classic comparison point
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class EvictionPolicy:
+    def __init__(self, mode: str = "fifo"):
+        if mode not in ("fifo", "lru"):
+            raise ValueError(f"unknown eviction mode {mode!r}")
+        self.mode = mode
+
+    def select(self, evictable: "dict[int, None]", arrival: np.ndarray,
+               last_use: np.ndarray, n: int) -> list[int]:
+        """Pick ``n`` victims from the evictable id set (keys of an
+        insertion-ordered dict, oldest insertion first)."""
+        ids = list(evictable)
+        if n >= len(ids):
+            return ids
+        key = arrival if self.mode == "fifo" else last_use
+        ids.sort(key=lambda b: (int(key[b]), b))
+        return ids[:n]

@@ -1,0 +1,239 @@
+"""Fixed-capacity block pool: a slab allocator over a preallocated KV buffer.
+
+Bookkeeping mirrors the fixed-array style of the MARS engine
+(``core.mars``): an occupancy bit-vector (``used``, the RequestQ
+``rq_valid`` analogue), a refcount array, and first-arrival / last-use
+ticks per block.  The physical KV storage is a pair of arrays of shape
+``(num_blocks, block_size, n_kv_heads, head_dim)`` allocated once up
+front (host-resident, mutated in place; the engine stages them to device
+per step) — block ids index directly into the paged-attention kernel's
+``k_pages``/``v_pages`` operands, so the allocator's placement decisions
+*are* the kernel's gather addresses.
+
+Blocks move through three states::
+
+    free  --alloc-->  live (refcount >= 1)
+    live  --decref(cache=True), refcount hits 0-->  cached (evictable)
+    live  --decref(cache=False), refcount hits 0--> free
+    cached --reuse--> live        cached --evict--> free
+
+``content`` carries an opaque per-block payload tag (the token tuple the
+block holds) used by prefix matching and by the soak tests to prove
+copy-on-write never mutates a shared block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.kvcache.evict import EvictionPolicy
+from repro.kvcache.placement import PlacementPolicy
+
+# one block == one 4KB page of the DRAM model (64 x 64B lines)
+LINES_PER_BLOCK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    num_blocks: int = 256
+    block_size: int = 16          # tokens per block
+    blocks_per_group: int = 8     # DRAM row neighborhood = n_banks pages
+    placement: str = "mars"       # "mars" | "naive"
+    eviction: str = "fifo"        # "fifo" (PhyPageOrderQ) | "lru"
+    # KV buffer shape; None = metadata-only pool (simulation / tests)
+    n_kv_heads: Optional[int] = None
+    head_dim: Optional[int] = None
+    dtype: str = "float32"
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    evictions: int = 0
+    cow_copies: int = 0
+    prefix_hits: int = 0
+    alloc_fails: int = 0
+
+
+class BlockPool:
+    def __init__(self, cfg: PoolConfig):
+        self.cfg = cfg
+        n = cfg.num_blocks
+        self.used = np.zeros(n, bool)            # occupancy bit-vector
+        self.refcount = np.zeros(n, np.int32)
+        self.arrival = np.zeros(n, np.int64)     # allocation tick
+        self.last_use = np.zeros(n, np.int64)
+        self.content: list[object] = [None] * n
+        self._tick = 0
+        self.placement = PlacementPolicy(n, cfg.blocks_per_group,
+                                         cfg.placement)
+        self.eviction = EvictionPolicy(cfg.eviction)
+        # cached (refcount-0, still resident) blocks, insertion-ordered
+        self._evictable: dict[int, None] = {}
+        # prefix cache hook: called with a block id as it is evicted
+        self.on_evict: Optional[Callable[[int], None]] = None
+        # admission reservations (see reserve()): blocks promised to
+        # admitted-but-not-yet-allocated work.  Held until the owning
+        # request claims (allocates) or releases them — NOT dropped at
+        # schedule time, otherwise lazily-allocated decode blocks would
+        # over-commit the pool.
+        self.reserved = 0
+        self.stats = PoolStats()
+        # KV payload: host-resident, mutated in place (a functional
+        # .at[].set would copy the whole pool per token); staged to device
+        # once per engine step when the kernel consumes it
+        self.k_pages = self.v_pages = None
+        if cfg.n_kv_heads is not None and cfg.head_dim is not None:
+            shape = (n, cfg.block_size, cfg.n_kv_heads, cfg.head_dim)
+            self.k_pages = np.zeros(shape, cfg.dtype)
+            self.v_pages = np.zeros(shape, cfg.dtype)
+
+    # -- capacity -----------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return self.placement.num_free
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._evictable)
+
+    @property
+    def num_live(self) -> int:
+        return int(self.used.sum()) - self.num_cached
+
+    def can_alloc(self, n: int) -> bool:
+        return self.num_free + self.num_cached >= n
+
+    # -- admission reservations ---------------------------------------------
+
+    def can_reserve(self, n: int) -> bool:
+        """Capacity check for admission: unreserved reclaimable blocks."""
+        return self.num_free + self.num_cached - self.reserved >= n
+
+    def reserve(self, n: int) -> None:
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        assert n <= self.reserved, (n, self.reserved)
+        self.reserved -= n
+
+    # -- alloc / ref / free -------------------------------------------------
+
+    def alloc(self, n: int = 1,
+              hint_blocks: Iterable[int] = ()) -> list[int]:
+        """Allocate ``n`` blocks (refcount 1), evicting cached blocks if the
+        free list is short.  ``hint_blocks``: blocks the requesting gang
+        already holds; MARS placement packs near their row groups."""
+        short = n - self.num_free
+        if short > 0:
+            if short > self.num_cached:
+                self.stats.alloc_fails += 1
+                raise RuntimeError(
+                    f"pool exhausted: want {n}, free {self.num_free}, "
+                    f"cached {self.num_cached}")
+            self._evict(short)
+        hint_groups = self.placement.groups_of(list(hint_blocks))
+        out = self.placement.choose(n, hint_groups)
+        assert out is not None
+        self._tick += 1
+        for bid in out:
+            self.used[bid] = True
+            self.refcount[bid] = 1
+            self.arrival[bid] = self._tick
+            self.last_use[bid] = self._tick
+            self.content[bid] = None
+        self.stats.allocs += n
+        return out
+
+    def incref(self, bid: int) -> None:
+        assert self.used[bid] and self.refcount[bid] > 0
+        self.refcount[bid] += 1
+
+    def decref(self, bid: int, cache: bool = False) -> None:
+        """Drop one reference; at zero either retain as evictable prefix
+        storage (``cache=True``) or free outright."""
+        assert self.used[bid] and self.refcount[bid] > 0, bid
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            if cache:
+                self._evictable[bid] = None
+            else:
+                self._free_block(bid)
+
+    def reuse_cached(self, bid: int) -> None:
+        """Revive a cached block (prefix hit): refcount 0 -> 1."""
+        assert bid in self._evictable, bid
+        del self._evictable[bid]
+        self.refcount[bid] = 1
+        self._tick += 1
+        self.last_use[bid] = self._tick
+        self.stats.prefix_hits += 1
+
+    def touch(self, bid: int) -> None:
+        self._tick += 1
+        self.last_use[bid] = self._tick
+
+    def _free_block(self, bid: int) -> None:
+        self.used[bid] = False
+        self.refcount[bid] = 0
+        self.content[bid] = None
+        self.placement.add_free(bid)
+        self.stats.frees += 1
+
+    def _evict(self, n: int) -> None:
+        victims = self.eviction.select(self._evictable, self.arrival,
+                                       self.last_use, n)
+        for bid in victims:
+            del self._evictable[bid]
+            if self.on_evict is not None:
+                self.on_evict(bid)
+            self._free_block(bid)
+            self.stats.evictions += 1
+
+    # -- KV payload ---------------------------------------------------------
+
+    def write_kv(self, bid: int, offset: int, k, v) -> None:
+        """Write ``t`` token KV rows into a block at ``offset``.
+        k/v: (t, n_kv_heads, head_dim)."""
+        t = k.shape[0]
+        assert offset + t <= self.cfg.block_size
+        self.k_pages[bid, offset:offset + t] = np.asarray(k)
+        self.v_pages[bid, offset:offset + t] = np.asarray(v)
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """Copy-on-write payload copy (content tag + KV rows)."""
+        self.content[dst] = self.content[src]
+        if self.k_pages is not None:
+            self.k_pages[dst] = self.k_pages[src]
+            self.v_pages[dst] = self.v_pages[src]
+        self.stats.cow_copies += 1
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Allocator ground truth; cheap enough to call inside soak loops."""
+        free = self.placement.free_ids()
+        assert len(free) == len(set(free)), "free list holds duplicates"
+        free_set = set(free)
+        group_union = set().union(*self.placement._group_free) \
+            if self.placement._group_free else set()
+        assert free_set == group_union, "stack / group free sets diverged"
+        for bid in range(self.cfg.num_blocks):
+            if bid in free_set:
+                assert not self.used[bid], f"block {bid} free AND used"
+                assert self.refcount[bid] == 0
+            else:
+                assert self.used[bid], f"block {bid} leaked (not free, not used)"
+        cached = set(self._evictable)
+        for bid in cached:
+            assert self.used[bid] and self.refcount[bid] == 0
+        live = [b for b in range(self.cfg.num_blocks)
+                if self.used[b] and b not in cached]
+        for bid in live:
+            assert self.refcount[bid] > 0, f"live block {bid} has refcount 0"
+        assert len(free_set) + len(cached) + len(live) == self.cfg.num_blocks
+        assert 0 <= self.reserved <= self.cfg.num_blocks

@@ -11,16 +11,20 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_types(n: int) -> dict:
+    """``axis_types`` kwarg for ``jax.make_mesh`` where supported.
+    ``jax.sharding.AxisType`` only exists on newer jax; older versions
+    default to Auto semantics anyway, so omit the kwarg there."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_local_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **auto_axis_types(2))

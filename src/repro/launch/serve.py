@@ -39,6 +39,35 @@ def synth_requests(n: int, vocab: int, n_prefixes: int = 8,
     return out
 
 
+def main_paged(args):
+    """Continuous batching over the paged KV pool (``serve.engine``):
+    admission bounded by pool capacity, prefix-shared blocks, MARS-aware
+    placement, copy-on-write forks."""
+    from repro.kvcache import BlockPool, PoolConfig
+    from repro.serve.engine import ServeEngine
+
+    pool = BlockPool(PoolConfig(num_blocks=args.pool_blocks, block_size=16,
+                                n_kv_heads=2, head_dim=64))
+    sched = MarsScheduler(pool=pool)
+    eng = ServeEngine(pool, sched, max_lanes=args.batch)
+    reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
+                    prefix_len=r.prefix_len, max_new=args.new_tokens)
+            for r in synth_requests(args.requests, vocab=128)]
+    t0 = time.time()
+    finished = eng.run(reqs)
+    dt = time.time() - t0
+    print(f"[serve --paged] served={len(finished)} steps={eng.stats.steps} "
+          f"decode_tokens={eng.stats.decode_tokens} "
+          f"prefix_hits={pool.stats.prefix_hits} "
+          f"shared_prompt_tokens={eng.stats.shared_prompt_tokens} "
+          f"evictions={pool.stats.evictions} "
+          f"pool_rejects={sched.stats.pool_rejects} wall={dt:.1f}s")
+    pool.check_invariants()
+    return dict(served=len(finished), steps=eng.stats.steps,
+                prefix_hits=pool.stats.prefix_hits,
+                pool_rejects=sched.stats.pool_rejects)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1_5_0_5b")
@@ -46,7 +75,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV-cache block pool")
+    ap.add_argument("--pool-blocks", type=int, default=256)
     args = ap.parse_args(argv)
+
+    if args.paged:
+        return main_paged(args)
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)

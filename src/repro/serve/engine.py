@@ -1,0 +1,229 @@
+"""Continuous-batching serve engine over the paged KV-cache pool.
+
+The loop ties the whole MARS serving stack together, one step per call:
+
+  admit    pop page-coherent batches from the ``MarsScheduler`` (which
+           admits against pool capacity) into free decode lanes
+  prefill  match the prompt against the prefix cache (ref-counted shared
+           blocks), allocate the rest MARS-placed, write prompt KV
+  decode   one token for every running lane through ``paged_attention``
+           reading the pool's block tables; appends copy-on-write when a
+           forked lane shares its tail block
+  free     finished lanes release references; registered prefix blocks
+           stay resident as evictable cache
+
+The model is pluggable; ``ToyModel`` is a deterministic single-layer
+attention LM (fixed random embeddings + readout) so tests can check the
+served tokens are bit-identical whether KV lives densely or paged, shared
+or copy-on-written.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention import ops
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kvcache.pool import BlockPool
+from repro.kvcache.prefix import BlockTable, PrefixCache
+from repro.serving.scheduler import MarsScheduler, Request
+
+
+class ToyModel:
+    """Single-layer attention LM with frozen random tables (deterministic)."""
+
+    def __init__(self, vocab: int = 128, n_heads: int = 4,
+                 n_kv_heads: int = 2, head_dim: int = 64, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.vocab, self.n_heads = vocab, n_heads
+        self.n_kv_heads, self.head_dim = n_kv_heads, head_dim
+        s = 1.0 / np.sqrt(head_dim)
+        self.emb_q = rng.normal(0, s, (vocab, n_heads, head_dim)).astype(np.float32)
+        self.emb_k = rng.normal(0, s, (vocab, n_kv_heads, head_dim)).astype(np.float32)
+        self.emb_v = rng.normal(0, s, (vocab, n_kv_heads, head_dim)).astype(np.float32)
+        self.w_out = rng.normal(0, s, (n_heads * head_dim, vocab)).astype(np.float32)
+
+    def kv_for(self, tokens):
+        t = np.asarray(tokens, np.int64) % self.vocab
+        return self.emb_k[t], self.emb_v[t]
+
+    def q_for(self, tokens):
+        return self.emb_q[np.asarray(tokens, np.int64) % self.vocab]
+
+    def readout(self, o, salt):
+        """attention out (B, H, D) + per-lane salt -> next tokens (B,)."""
+        logits = np.asarray(o).reshape(len(o), -1) @ self.w_out
+        return (np.argmax(logits, -1) + np.asarray(salt)) % self.vocab
+
+
+@dataclasses.dataclass
+class SeqState:
+    rid: int
+    tokens: list                 # prompt + generated
+    table: BlockTable
+    max_new: int
+    salt: int = 0                # distinguishes forked samples
+    n_generated: int = 0
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.n_generated >= self.max_new
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    decode_tokens: int = 0
+    shared_prompt_tokens: int = 0
+
+
+class ServeEngine:
+    def __init__(self, pool: BlockPool, scheduler: MarsScheduler,
+                 model: Optional[ToyModel] = None, *, max_lanes: int = 8,
+                 use_kernel: bool = False):
+        assert pool.k_pages is not None, "engine needs a pool with KV buffers"
+        self.pool = pool
+        self.cache = PrefixCache(pool.cfg.block_size)
+        self.cache.attach(pool)
+        self.scheduler = scheduler
+        self.model = model or ToyModel(n_kv_heads=pool.cfg.n_kv_heads,
+                                       head_dim=pool.cfg.head_dim)
+        self.max_lanes = max_lanes
+        self.use_kernel = use_kernel
+        self.running: list[SeqState] = []
+        self.finished: dict[int, list] = {}
+        self.stats = EngineStats()
+        # admission-reservation bookkeeping per request: every actual block
+        # allocation converts one reserved block into a live one; leftovers
+        # release when the request's last lane finishes
+        self._claims: dict[int, int] = {}
+        self._live_seqs: dict[int, int] = {}
+
+    def _claim(self, rid: int, n_allocs: int) -> None:
+        take = min(self._claims.get(rid, 0), n_allocs)
+        if take:
+            self.pool.unreserve(take)
+            self._claims[rid] -= take
+
+    def _finish_seq(self, seq: SeqState) -> None:
+        self.finished.setdefault(seq.rid, []).append(seq.out_tokens)
+        self.cache.release(seq.table, self.pool)
+        self._live_seqs[seq.rid] -= 1
+        if self._live_seqs[seq.rid] == 0:
+            del self._live_seqs[seq.rid]
+            self.pool.unreserve(self._claims.pop(seq.rid, 0))
+
+    # -- admission / prefill -------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        return self.scheduler.offer(req)
+
+    def _prefill(self, req: Request) -> list[SeqState]:
+        prompt = list(req.prompt)
+        self._claims[req.rid] = self._claims.get(req.rid, 0) \
+            + req.blocks_needed(self.pool.cfg.block_size)
+        self._live_seqs[req.rid] = self._live_seqs.get(req.rid, 0) \
+            + req.n_samples
+        bids, n = self.cache.match(prompt, self.pool)
+        table = BlockTable(bids, n)
+        rest = prompt[n:]
+        allocs0 = self.pool.stats.allocs
+        table.extend(self.pool, rest, seq_tokens=prompt, cache=self.cache,
+                     kv=self.model.kv_for(rest))
+        self._claim(req.rid, self.pool.stats.allocs - allocs0)
+        self.stats.prefills += 1
+        self.stats.shared_prompt_tokens += n
+        seqs = [SeqState(req.rid, prompt, table, req.max_new)]
+        for i in range(1, req.n_samples):  # forks share all blocks (CoW later)
+            seqs.append(SeqState(req.rid, list(prompt), table.fork(self.pool),
+                                 req.max_new, salt=i))
+        return seqs
+
+    # -- one engine step ------------------------------------------------------
+
+    def step(self, now: float = 0.0) -> int:
+        """Admit + prefill into free lanes, then decode one token on every
+        running lane.  Returns number of tokens generated this step."""
+        free = self.max_lanes - len(self.running)
+        if free > 0:
+            # a request occupies one decode lane per forked sample
+            for req in self.scheduler.schedule_batch(
+                    free, now=now, cost_fn=lambda r: r.n_samples):
+                self.running.extend(self._prefill(req))
+        if not self.running:
+            return 0
+        # page-coherent lane order: tail blocks grouped by row neighborhood
+        order = ops.batch_lane_order(
+            [s.table for s in self.running],
+            self.pool.cfg.blocks_per_group)
+        self.running = [self.running[i] for i in order]
+
+        pt, lengths = ops.pool_page_tables([s.table for s in self.running])
+        q = self.model.q_for([s.tokens[-1] for s in self.running])
+        # stage the host-mutated pool buffers to device once per step
+        kp, vp = jnp.asarray(self.pool.k_pages), jnp.asarray(self.pool.v_pages)
+        if self.use_kernel:
+            from repro.kernels.paged_attention.paged_attention import \
+                paged_attention
+            o = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+        else:
+            o = paged_attention_ref(q, kp, vp, pt, lengths)
+        nxt = self.model.readout(o, [s.salt for s in self.running])
+
+        still: list[SeqState] = []
+        for seq, tok in zip(self.running, nxt):
+            tok = int(tok)
+            seq.tokens.append(tok)
+            seq.out_tokens.append(tok)
+            seq.n_generated += 1
+            self.stats.decode_tokens += 1
+            if seq.done:
+                self._finish_seq(seq)
+            else:
+                # append the token's KV for the next step (copy-on-write if
+                # the tail block is shared with a fork)
+                allocs0 = self.pool.stats.allocs
+                seq.table.extend(self.pool, [tok], seq_tokens=seq.tokens,
+                                 cache=self.cache,
+                                 kv=self.model.kv_for([tok]))
+                self._claim(seq.rid, self.pool.stats.allocs - allocs0)
+                still.append(seq)
+        self.running = still
+        self.stats.steps += 1
+        return len(nxt)
+
+    def run(self, requests, *, max_steps: int = 10_000) -> dict[int, list]:
+        """Drive submit/step to completion (the offline serving loop)."""
+        pending = list(requests)
+        for step_i in range(max_steps):
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            made = self.step(now=float(step_i))
+            if not pending and not self.running and not len(self.scheduler):
+                break
+            if made == 0 and not self.running:
+                # idle engine that still holds work: decide if it can ever
+                # make progress again
+                if len(self.scheduler):
+                    # all lanes free yet nothing scheduled -> the head
+                    # request's fork fan-out exceeds the lane budget
+                    raise RuntimeError(
+                        f"queued request needs more than max_lanes="
+                        f"{self.max_lanes} decode lanes for its n_samples")
+                if pending:
+                    # pool is as empty as it will ever get and admission
+                    # still failed -> the request can never fit
+                    req = pending[0]
+                    raise RuntimeError(
+                        f"request {req.rid} needs "
+                        f"{req.blocks_needed(self.pool.cfg.block_size)} "
+                        f"blocks but the pool only ever frees "
+                        f"{self.pool.num_free + self.pool.num_cached}")
+        else:
+            raise RuntimeError("engine did not drain within max_steps")
+        return self.finished

@@ -10,8 +10,9 @@ three paper structures map 1:1:
   PhyPageList    -> dict keyed by prefix-block hash, holding per-page FIFO
                     lists (set-associativity bounds tracked pages, exactly
                     like the 2-way SRAM table)
-  PhyPageOrderQ  -> pages drained in first-arrival order -> bounded delay
-                    (no starvation) while batches stay page-coherent
+  PhyPageOrderQ  -> drain the page holding the oldest buffered request
+                    (core/mars._forward) -> bounded delay (no starvation)
+                    while batches stay page-coherent
 
 ``schedule_batch`` pops up to ``batch_size`` requests page-major — the
 back-to-back CAS drain.  With MARS off it pops FIFO — the baseline.
@@ -34,11 +35,18 @@ class Request:
     arrival: float = 0.0
     prefix_len: int = 64    # block size for page hashing
     max_new: int = 16
+    n_samples: int = 1      # parallel samples (forked lanes, CoW tails)
 
     @property
     def page(self) -> str:
         block = self.prompt[:self.prefix_len]
         return hashlib.sha1(repr(block).encode()).hexdigest()[:12]
+
+    def blocks_needed(self, block_size: int) -> int:
+        """Worst-case (no prefix sharing) KV blocks over the full lifetime,
+        counting every forked sample as its own sequence."""
+        return -(-(len(self.prompt) + self.max_new) // block_size) \
+            * self.n_samples
 
 
 @dataclasses.dataclass
@@ -47,6 +55,7 @@ class SchedulerStats:
     batches: int = 0
     page_switches: int = 0
     stall_rejects: int = 0
+    pool_rejects: int = 0
     wait_sum: float = 0.0
 
     @property
@@ -62,7 +71,7 @@ class MarsScheduler:
     """Bounded-lookahead, page-grouping, oldest-page-first batcher."""
 
     def __init__(self, request_q: int = 512, page_entries: int = 128,
-                 ways: int = 2, mars: bool = True):
+                 ways: int = 2, mars: bool = True, pool=None):
         self.request_q = request_q
         self.page_entries = page_entries
         self.nsets = page_entries // ways
@@ -73,6 +82,15 @@ class MarsScheduler:
         self.fifo: deque = deque()
         self.total = 0
         self.stats = SchedulerStats()
+        # KV block pool (``kvcache.BlockPool``): admission is bounded by
+        # physical cache capacity, not just RequestQ entries.  A request's
+        # worst-case block need is reserved in the pool at offer(); the
+        # engine converts the reservation into real allocations as the
+        # sequence grows and releases the remainder when it finishes
+        # (reservations must outlive scheduling — decode blocks are
+        # allocated lazily, long after the batch was formed).
+        self.pool = pool
+        self._seq = 0                            # arrival counter
 
     def _set_of(self, page: str) -> int:
         return int(page, 16) % self.nsets
@@ -82,6 +100,11 @@ class MarsScheduler:
         if self.total >= self.request_q:
             self.stats.stall_rejects += 1
             return False
+        if self.pool is not None:
+            if not self.pool.can_reserve(
+                    req.blocks_needed(self.pool.cfg.block_size)):
+                self.stats.pool_rejects += 1
+                return False
         page = req.page
         if page not in self.pages:
             s = self._set_of(page)
@@ -91,18 +114,29 @@ class MarsScheduler:
                 return False
             ways.add(page)
             self.pages[page] = deque()
+        req._seq = self._seq            # arrival stamp: drain-order key
+        self._seq += 1
         self.pages[page].append(req)
         self.fifo.append(req)
         self.total += 1
+        if self.pool is not None:
+            self.pool.reserve(req.blocks_needed(self.pool.cfg.block_size))
         return True
 
-    def schedule_batch(self, batch_size: int,
-                       now: float | None = None) -> list:
-        """Forward (paper Fig 6): drain oldest pages to exhaustion."""
+    def schedule_batch(self, batch_size: int, now: float | None = None,
+                       cost_fn=None) -> list:
+        """Forward (paper Fig 6): drain oldest pages to exhaustion.
+
+        ``batch_size`` is a budget; each request costs ``cost_fn(r)``
+        (default 1 — e.g. the engine charges one lane per forked sample).
+        Scheduling stops before the first request that would overrun it.
+        """
         now = time.time() if now is None else now
+        cost_fn = cost_fn or (lambda r: 1)
+        budget = batch_size
         out: list[Request] = []
         if not self.mars:
-            while self.fifo and len(out) < batch_size:
+            while self.fifo and cost_fn(self.fifo[0]) <= budget:
                 r = self.fifo.popleft()
                 q = self.pages.get(r.page)
                 if q and r in q:
@@ -110,22 +144,31 @@ class MarsScheduler:
                     if not q:
                         self._drop_page(r.page)
                     out.append(r)
+                    budget -= cost_fn(r)
                     self.total -= 1
         else:
             last_page = None
-            while self.pages and len(out) < batch_size:
-                page = next(iter(self.pages))          # oldest allocation
+            while self.pages and budget > 0:
+                # the page holding the oldest buffered request (the MARS
+                # forward rule, core/mars._forward) — unlike oldest-page-
+                # -allocation order, this bounds delay even when one hot
+                # page refills faster than batches drain it
+                page = min(self.pages,
+                           key=lambda p: self.pages[p][0]._seq)
                 q = self.pages[page]
+                if cost_fn(q[0]) > budget:
+                    break
                 if page != last_page:
                     self.stats.page_switches += 1
                     last_page = page
-                while q and len(out) < batch_size:
+                while q and cost_fn(q[0]) <= budget:
                     r = q.popleft()
                     try:
                         self.fifo.remove(r)
                     except ValueError:
                         pass
                     out.append(r)
+                    budget -= cost_fn(r)
                     self.total -= 1
                 if not q:
                     self._drop_page(page)

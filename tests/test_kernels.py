@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip below; the rest collects
+    given = settings = st = None
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -128,14 +131,18 @@ def test_ssd_models_layer_uses_same_math():
 # MARS gather
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 300), st.integers(2, 50))
-def test_gather_sorted_equals_plain(n_ids, vocab):
-    ids = jax.random.randint(jax.random.key(n_ids), (n_ids,), 0, vocab)
-    table = jax.random.normal(jax.random.key(vocab), (vocab, 8))
-    a = embedding_gather(table, ids, mode="sorted")
-    b = embedding_gather_ref(table, ids)
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+if st is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 300), st.integers(2, 50))
+    def test_gather_sorted_equals_plain(n_ids, vocab):
+        ids = jax.random.randint(jax.random.key(n_ids), (n_ids,), 0, vocab)
+        table = jax.random.normal(jax.random.key(vocab), (vocab, 8))
+        a = embedding_gather(table, ids, mode="sorted")
+        b = embedding_gather_ref(table, ids)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+else:
+    def test_gather_sorted_equals_plain():
+        pytest.importorskip("hypothesis")
 
 
 def test_gather_batch_shape():

@@ -28,8 +28,13 @@ def test_fp8_kv_cache_decode_close_to_bf16(arch):
 
     a, b = outs[""], outs["float8_e4m3fn"]
     # fp8 storage perturbs logits slightly; ranking of the top token should
-    # survive and values stay within quantization noise
-    assert np.argmax(a) == np.argmax(b)
+    # survive whenever it is determined by more than the quantization
+    # noise (random smoke weights can leave the top two in a near-tie)
+    margin = np.sort(a)[-1] - np.sort(a)[-2]
+    if margin > 2 * np.abs(a - b).max():
+        assert np.argmax(a) == np.argmax(b)
+    else:
+        assert np.argmax(b) in np.argsort(a)[-2:]
     np.testing.assert_allclose(a, b, rtol=0.35, atol=0.35)
 
 

@@ -1,7 +1,10 @@
 """MARS engine: jitted scan vs python oracle + invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip below; the rest collects
+    given = settings = st = None
 
 from repro.core import mars, streams
 
@@ -51,19 +54,23 @@ def test_fifo_within_page():
             assert np.all(np.diff(pos[idx]) > 0)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 40), min_size=1, max_size=300),
-       st.integers(1, 4))
-def test_random_streams_always_drain(page_list, ways):
-    """Property: any input drains completely into a valid permutation."""
-    pages = np.asarray(page_list, np.int32)
-    addr = pages << streams.PAGE_SHIFT
-    cfg = mars.MarsConfig(request_q=64, page_entries=16, ways=ways,
-                          n_ports=2, mshr_per_core=8)
-    perm, _ = mars.mars_reorder(addr, cfg=cfg)
-    assert sorted(perm) == list(range(len(addr)))
-    ref = mars.mars_reorder_reference(addr, cfg=cfg)
-    np.testing.assert_array_equal(perm, ref)
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 40), min_size=1, max_size=300),
+           st.integers(1, 4))
+    def test_random_streams_always_drain(page_list, ways):
+        """Property: any input drains completely into a valid permutation."""
+        pages = np.asarray(page_list, np.int32)
+        addr = pages << streams.PAGE_SHIFT
+        cfg = mars.MarsConfig(request_q=64, page_entries=16, ways=ways,
+                              n_ports=2, mshr_per_core=8)
+        perm, _ = mars.mars_reorder(addr, cfg=cfg)
+        assert sorted(perm) == list(range(len(addr)))
+        ref = mars.mars_reorder_reference(addr, cfg=cfg)
+        np.testing.assert_array_equal(perm, ref)
+else:
+    def test_random_streams_always_drain():
+        pytest.importorskip("hypothesis")
 
 
 def test_single_page_stream_is_identity():

@@ -1,7 +1,10 @@
 """Serving scheduler (software MARS) + data pipeline tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip below; the rest collects
+    given = settings = st = None
 
 from repro.data.pipeline import BucketReorderBuffer, DataConfig, TokenStream
 from repro.serving.scheduler import (MarsScheduler, Request,
@@ -75,21 +78,25 @@ def test_scheduler_backpressure():
     assert sched.stats.stall_rejects == 16
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 200), st.integers(1, 12))
-def test_scheduler_property_conservation(n, n_prefixes):
-    reqs = _requests(n, n_prefixes=max(1, n_prefixes))
-    sched = MarsScheduler(mars=True)
-    pend = list(reqs)
-    got = 0
-    for _ in range(10 * n + 10):
-        while pend and sched.offer(pend[0]):
-            pend.pop(0)
-        b = sched.schedule_batch(7, now=1.0)
-        got += len(b)
-        if not pend and len(sched) == 0:
-            break
-    assert got == n
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 12))
+    def test_scheduler_property_conservation(n, n_prefixes):
+        reqs = _requests(n, n_prefixes=max(1, n_prefixes))
+        sched = MarsScheduler(mars=True)
+        pend = list(reqs)
+        got = 0
+        for _ in range(10 * n + 10):
+            while pend and sched.offer(pend[0]):
+                pend.pop(0)
+            b = sched.schedule_batch(7, now=1.0)
+            got += len(b)
+            if not pend and len(sched) == 0:
+                break
+        assert got == n
+else:
+    def test_scheduler_property_conservation():
+        pytest.importorskip("hypothesis")
 
 
 def test_tokenstream_deterministic_and_sharded():

@@ -1,0 +1,208 @@
+"""Serving scheduler coverage (page-major order, starvation, pool-capacity
+admission) and the continuous-batching engine over the paged pool."""
+import numpy as np
+import pytest
+
+from repro.kvcache import BlockPool, PoolConfig
+from repro.serve.engine import ServeEngine
+from repro.serving.scheduler import MarsScheduler, Request
+
+
+def _req(rid, prompt, max_new=4, arrival=None):
+    return Request(rid=rid, prompt=tuple(prompt),
+                   arrival=rid * 1e-3 if arrival is None else arrival,
+                   prefix_len=4, max_new=max_new)
+
+
+def _prefix(i):
+    return (i * 1000 + 1, i * 1000 + 2, i * 1000 + 3, i * 1000 + 4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: page-major batch order
+# ---------------------------------------------------------------------------
+
+def test_batches_are_page_major_oldest_first():
+    sched = MarsScheduler(mars=True)
+    # interleaved arrivals: pages 0,1,2,0,1,2,...
+    reqs = [_req(i, _prefix(i % 3) + (100 + i,)) for i in range(12)]
+    for r in reqs:
+        assert sched.offer(r)
+    batch = sched.schedule_batch(8, now=1.0)
+    pages = [r.page for r in batch]
+    # page-major: each page appears as one contiguous run
+    runs = [p for i, p in enumerate(pages) if i == 0 or pages[i - 1] != p]
+    assert len(runs) == len(set(pages))
+    # oldest page first, FIFO within a page
+    assert batch[0].page == reqs[0].page
+    rids = [r.rid for r in batch if r.page == reqs[0].page]
+    assert rids == sorted(rids)
+
+
+def test_no_starvation_under_adversarial_arrival():
+    """A lone cold request must not wait forever while a hot page keeps
+    refilling (oldest-page-first drains to exhaustion, then moves on)."""
+    sched = MarsScheduler(mars=True)
+    hot = 0
+    cold = _req(999, _prefix(7) + (5,))
+    assert sched.offer(_req(hot, _prefix(1) + (hot,))); hot += 1
+    assert sched.offer(cold)
+    waited = 0
+    for _ in range(50):
+        # adversary: keep the hot page full
+        for _ in range(4):
+            sched.offer(_req(hot, _prefix(1) + (hot,))); hot += 1
+        batch = sched.schedule_batch(4, now=1.0)
+        assert batch
+        if any(r.rid == 999 for r in batch):
+            break
+        waited += 1
+    else:
+        pytest.fail("cold request starved")
+    assert waited <= 2   # bounded delay: scheduled once its page is oldest
+
+
+# ---------------------------------------------------------------------------
+# scheduler: pool-capacity admission
+# ---------------------------------------------------------------------------
+
+def test_pool_admission_bounds_accepts():
+    pool = BlockPool(PoolConfig(num_blocks=16, block_size=4))
+    sched = MarsScheduler(pool=pool)
+    # each request needs ceil((6 + 4)/4) = 3 blocks -> only 5 fit
+    reqs = [_req(i, _prefix(i) + (1, 2)) for i in range(10)]
+    accepted = [r for r in reqs if sched.offer(r)]
+    assert len(accepted) == 5
+    assert sched.stats.pool_rejects == 5
+    assert pool.reserved == 15
+    # reservations outlive scheduling: the engine converts them into real
+    # allocations as sequences grow and releases the rest at finish
+    batch = sched.schedule_batch(8, now=1.0)
+    assert len(batch) == 5 and pool.reserved == 15
+
+
+def test_admission_accounts_live_blocks():
+    pool = BlockPool(PoolConfig(num_blocks=16, block_size=4))
+    pool.alloc(12)                      # live KV already in the pool
+    sched = MarsScheduler(pool=pool)
+    assert sched.offer(_req(0, _prefix(0) + (1, 2)))     # needs 3: fits
+    assert not sched.offer(_req(1, _prefix(1) + (1, 2)))  # needs 3 more: no
+    assert sched.stats.pool_rejects == 1
+
+
+# ---------------------------------------------------------------------------
+# engine: continuous batching end-to-end
+# ---------------------------------------------------------------------------
+
+def _engine(num_blocks=96, max_lanes=4):
+    pool = BlockPool(PoolConfig(num_blocks=num_blocks, block_size=16,
+                                n_kv_heads=2, head_dim=32))
+    return ServeEngine(pool, MarsScheduler(pool=pool), max_lanes=max_lanes)
+
+
+def test_engine_serves_all_and_frees_everything():
+    rng = np.random.default_rng(0)
+    pref = tuple(rng.integers(1, 100, 20).tolist())
+    reqs = [_req(i, pref + tuple(rng.integers(1, 100, 3).tolist()),
+                 max_new=5) for i in range(12)]
+    eng = _engine()
+    out = eng.run(reqs)
+    assert sorted(out) == list(range(12))
+    assert all(len(v[0]) == 5 for v in out.values())
+    eng.pool.check_invariants()
+    assert eng.pool.num_live == 0
+    assert eng.pool.stats.prefix_hits > 0       # shared prompt prefix
+
+
+def test_engine_prefix_sharing_is_transparent():
+    """Served tokens are identical with and without a cache-warm pool."""
+    prompt = tuple(range(1, 25))
+    cold = _engine().run([_req(0, prompt, max_new=6)])
+    warm_eng = _engine()
+    warm = warm_eng.run([_req(0, prompt, max_new=6),
+                         _req(1, prompt, max_new=6)])
+    assert warm_eng.pool.stats.prefix_hits > 0
+    assert cold[0] == warm[0] == warm[1]
+
+
+def test_engine_forks_cow_and_diverge():
+    r = Request(rid=0, prompt=tuple(range(1, 20)), prefix_len=4,
+                max_new=5, n_samples=3)
+    eng = _engine()
+    out = eng.run([r])
+    assert len(out[0]) == 3
+    assert len({tuple(t) for t in out[0]}) == 3  # salts diverge the samples
+    assert eng.pool.stats.cow_copies > 0         # forked tails were CoW'd
+    eng.pool.check_invariants()
+    assert eng.pool.num_live == 0
+
+
+def test_engine_reservation_covers_lazy_decode_blocks():
+    """Admission must not over-commit: blocks a running sequence will
+    allocate mid-decode stay reserved until it finishes (regression for a
+    crash where reservations were dropped at schedule time)."""
+    pool = BlockPool(PoolConfig(num_blocks=4, block_size=16,
+                                n_kv_heads=2, head_dim=32))
+    eng = ServeEngine(pool, MarsScheduler(pool=pool), max_lanes=4)
+    a = _req(0, tuple(range(100, 116)), max_new=18)   # needs 3 blocks
+    b = _req(1, tuple(range(200, 215)), max_new=16)   # needs 2 blocks
+    out = eng.run([a, b])
+    assert sorted(out) == [0, 1]
+    pool.check_invariants()
+    assert pool.reserved == 0 and pool.num_live == 0
+
+
+def test_engine_fork_reservation_counts_every_sample():
+    """n_samples multiplies the worst-case block need at admission
+    (regression for a mid-decode pool-exhausted crash on forks)."""
+    # needs 2 blocks x 3 samples = 6 > 3: rejected up front, clean error
+    pool = BlockPool(PoolConfig(num_blocks=3, block_size=16,
+                                n_kv_heads=2, head_dim=32))
+    eng = ServeEngine(pool, MarsScheduler(pool=pool), max_lanes=4)
+    r = Request(rid=0, prompt=tuple(range(1, 17)), max_new=4, n_samples=3)
+    with pytest.raises(RuntimeError, match="needs 6 blocks"):
+        eng.run([r])
+    # exactly enough capacity: must serve all forks without exhaustion
+    pool = BlockPool(PoolConfig(num_blocks=6, block_size=16,
+                                n_kv_heads=2, head_dim=32))
+    eng = ServeEngine(pool, MarsScheduler(pool=pool), max_lanes=4)
+    out = eng.run([Request(rid=0, prompt=tuple(range(1, 17)), max_new=4,
+                           n_samples=3)])
+    assert len(out[0]) == 3
+    pool.check_invariants()
+    assert pool.reserved == 0 and pool.num_live == 0
+
+
+def test_engine_lane_budget_counts_forked_samples():
+    """running lanes never exceed max_lanes even when requests fan out
+    into n_samples forks (regression: forks used to multiply the batch)."""
+    eng = _engine(num_blocks=96, max_lanes=4)
+    reqs = [Request(rid=i, prompt=tuple(range(10 * i + 1, 10 * i + 17)),
+                    max_new=4, n_samples=4) for i in range(4)]
+    for r in reqs:
+        assert eng.submit(r)
+    for step_i in range(200):
+        eng.step(now=float(step_i))
+        assert len(eng.running) <= 4
+        if not eng.running and not len(eng.scheduler):
+            break
+    assert sorted(eng.finished) == [0, 1, 2, 3]
+    # a fan-out wider than the lane budget can never run: clean error
+    eng = _engine(max_lanes=2)
+    with pytest.raises(RuntimeError, match="max_lanes"):
+        eng.run([Request(rid=9, prompt=tuple(range(1, 17)), max_new=2,
+                         n_samples=3)])
+
+
+def test_engine_backpressure_tiny_pool():
+    """More requests than the pool fits at once: admission defers, engine
+    drains, everything is eventually served exactly once."""
+    rng = np.random.default_rng(1)
+    reqs = [_req(i, tuple(rng.integers(1, 50, 18).tolist()), max_new=4)
+            for i in range(10)]
+    eng = _engine(num_blocks=12, max_lanes=3)
+    out = eng.run(reqs)
+    assert sorted(out) == list(range(10))
+    assert eng.scheduler.stats.pool_rejects > 0
+    eng.pool.check_invariants()
+    assert eng.pool.num_live == 0
