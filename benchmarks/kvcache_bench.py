@@ -12,6 +12,13 @@ after churn.
 Emits ``kvcache/<placement>/...`` rows plus the headline uplift, and the
 same traces after a bounded-window ``reorder.mars_order`` pass (the MC-side
 MARS reorder buffer) to show placement and reordering compose.
+
+Eviction section (ROADMAP "online eviction tuning"): a skewed-prefix
+workload — request popularity Zipf-distributed over prompt prefixes —
+drives the prefix cache under memory pressure and reports the FIFO
+(PhyPageOrderQ first-arrival) vs LRU hit rates side by side.  FIFO evicts
+hot prefixes simply because they are old; LRU keeps them resident, so its
+hit rate should pull ahead as the skew sharpens.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ from repro.core.reorder import mars_order
 from repro.core.streams import PAGE_SHIFT
 from repro.kernels.paged_attention import ops
 from repro.kvcache import BlockPool, PoolConfig
-from repro.kvcache.prefix import BlockTable
+from repro.kvcache.prefix import BlockTable, PrefixCache
 
 
 def churned_pool(placement: str, *, num_blocks: int = 512, n_live: int = 16,
@@ -86,21 +93,84 @@ def mean_uplift(n_live: int, seeds=(0, 1, 2), **kw) -> tuple[float, dict]:
     return float(np.mean(ups)), last
 
 
-def run(emit) -> None:
-    for n_live in (8, 32):   # decode lanes: more lanes = deeper interleave
+def zipf_requests(n_requests: int, n_prefixes: int, zipf_a: float,
+                  prefix_tokens: int, seed: int = 0):
+    """Skewed-prefix workload: request i reuses prefix p with
+    P(p) ∝ 1/(rank+1)^a, plus a unique tail (never shareable)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(int(t) for t in rng.integers(1, 10_000, prefix_tokens))
+                for _ in range(n_prefixes)]
+    probs = 1.0 / np.arange(1, n_prefixes + 1) ** zipf_a
+    probs /= probs.sum()
+    picks = rng.choice(n_prefixes, size=n_requests, p=probs)
+    out = []
+    for i, p in enumerate(picks):
+        tail = (100_000 + 2 * i, 100_001 + 2 * i)
+        out.append(prefixes[p] + tail)
+    return out
+
+
+def eviction_comparison(*, zipf_a: float = 1.1, n_prefixes: int = 48,
+                        n_requests: int = 400, num_blocks: int = 48,
+                        prefix_blocks: int = 2, block_size: int = 16,
+                        seed: int = 0) -> dict:
+    """{policy: prefix-cache hit rate} for the same Zipf request stream
+    under FIFO and LRU eviction, with the pool sized well below the
+    working set so eviction decides who stays resident."""
+    assert num_blocks < n_prefixes * prefix_blocks, \
+        "pool must be under memory pressure for eviction to matter"
+    prompts = zipf_requests(n_requests, n_prefixes, zipf_a,
+                            prefix_blocks * block_size, seed=seed)
+    out = {}
+    for policy in ("fifo", "lru"):
+        pool = BlockPool(PoolConfig(num_blocks=num_blocks,
+                                    block_size=block_size,
+                                    eviction=policy))
+        cache = PrefixCache(block_size)
+        cache.attach(pool)
+        hits = possible = 0
+        for prompt in prompts:
+            prompt = list(prompt)
+            bids, n = cache.match(prompt, pool)
+            table = BlockTable(list(bids), n)
+            table.extend(pool, prompt[n:], seq_tokens=prompt, cache=cache)
+            hits += n
+            possible += prefix_blocks * block_size
+            cache.release(table, pool)
+        pool.check_invariants()
+        out[policy] = hits / possible
+    return out
+
+
+def run(emit, smoke: bool = False) -> None:
+    lanes = (8,) if smoke else (8, 32)
+    seeds = (0,) if smoke else (0, 1, 2)
+    for n_live in lanes:     # decode lanes: more lanes = deeper interleave
         t0 = time.perf_counter()
-        uplift, res = mean_uplift(n_live)
+        uplift, res = mean_uplift(n_live, seeds=seeds)
         us = (time.perf_counter() - t0) * 1e6
         for placement, r in res.items():
             emit(f"kvcache/placement/{placement}/lanes{n_live}", us / 6,
                  f"{r.achieved_gbps:.2f}GB/s")
         emit(f"kvcache/placement/uplift/lanes{n_live}", us / 6,
              f"{100 * uplift:.2f}%")
-    # with the MC-side MARS reorder buffer in front (window = RequestQ):
-    # reordering recovers part of what naive placement lost, shrinking the
-    # gap — the co-design point: placement helps where reordering cannot
-    t0 = time.perf_counter()
-    res = placement_comparison(n_live=32, reorder_window=512)
-    us = (time.perf_counter() - t0) * 1e6
-    uplift = res["mars"].achieved_gbps / res["naive"].achieved_gbps - 1
-    emit("kvcache/placement+reorder/uplift", us / 2, f"{100 * uplift:.2f}%")
+    if not smoke:
+        # with the MC-side MARS reorder buffer in front (window = RequestQ):
+        # reordering recovers part of what naive placement lost, shrinking
+        # the gap — the co-design point: placement helps where reordering
+        # cannot
+        t0 = time.perf_counter()
+        res = placement_comparison(n_live=32, reorder_window=512)
+        us = (time.perf_counter() - t0) * 1e6
+        uplift = res["mars"].achieved_gbps / res["naive"].achieved_gbps - 1
+        emit("kvcache/placement+reorder/uplift", us / 2,
+             f"{100 * uplift:.2f}%")
+    # FIFO vs LRU under skewed prefix popularity
+    n_requests = 150 if smoke else 400
+    for zipf_a in (0.8, 1.3):
+        t0 = time.perf_counter()
+        rates = eviction_comparison(zipf_a=zipf_a, n_requests=n_requests)
+        us = (time.perf_counter() - t0) * 1e6
+        for policy, rate in rates.items():
+            emit(f"kvcache/evict/{policy}/zipf{zipf_a}", us / 2,
+                 f"{100 * rate:.1f}%hit")

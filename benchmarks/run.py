@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV.  One section per paper
 table/figure plus the TPU-adaptation kernel benchmarks.
+
+``--smoke`` runs a reduced pass of the sections that support it (the
+placement/eviction benches) and skips the rest — cheap enough for CI, so
+the benches cannot silently rot.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 
 
@@ -18,6 +23,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark section name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI pass; sections without smoke support "
+                         "are skipped")
     args = ap.parse_args()
 
     sections = []
@@ -42,6 +50,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in sections:
         if args.only and args.only not in name:
+            continue
+        smoke_aware = "smoke" in inspect.signature(fn).parameters
+        if args.smoke:
+            if smoke_aware:
+                fn(_emit, smoke=True)
             continue
         fn(_emit)
 

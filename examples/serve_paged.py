@@ -9,7 +9,10 @@ All three MARS layers of the serving stack:
      prefix-shared blocks, MARS-aware placement, copy-on-write forks,
      pool-capacity admission;
   3. the BULK kernel: paged_attention reading the pool's block tables
-     (Pallas interpret mode), validated against the dense jnp oracle.
+     (Pallas interpret mode), validated against the dense jnp oracle;
+  4. the FULL LM: a real multi-layer config served through the unified
+     KV-backend API (``PagedBackend``), token-exact against the dense
+     backend.
 """
 import numpy as np
 
@@ -50,3 +53,8 @@ for use_kernel in (False, True):
 assert outs[False] == outs[True], "kernel vs oracle serving paths diverged"
 print("[example] paged_attention kernel serving matches dense oracle "
       f"on {sum(len(v) for v in outs[True].values())} sequences")
+
+# 4. full-LM paged serving: qwen smoke config, every layer's KV in the
+# layered pool, parity against the dense backend asserted inside
+serve.main(["--paged", "--config", "qwen1_5_0_5b", "--smoke",
+            "--requests", "12", "--batch", "4", "--new-tokens", "5"])

@@ -9,6 +9,13 @@ The serving analogue of the paper's memory system, one module per layer:
   prefix     ref-counted prefix sharing + copy-on-write block tables
   evict      reclaim of cached (refcount-0) blocks: first-arrival order
              (the PhyPageOrderQ policy) or LRU
+  backend    the unified KV-backend API: ``KVBackend`` protocol with
+             ``DenseBackend`` (concrete per-layer cache) and
+             ``PagedBackend`` (block tables over a layered pool)
+
+``backend`` imports jax + the model stack; it is intentionally NOT
+re-exported here so the allocator modules stay importable numpy-only —
+use ``from repro.kvcache.backend import ...``.
 """
 from repro.kvcache.evict import EvictionPolicy
 from repro.kvcache.placement import PlacementPolicy, row_group_of

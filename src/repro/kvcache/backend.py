@@ -1,0 +1,361 @@
+"""Unified KV-backend API: dense and paged serving caches, one interface.
+
+The model (``models.lm``) speaks to its KV storage only through
+``KVBackend``: ``prefill`` runs a prompt batch and stores every layer's
+K/V, ``decode_step`` advances every lane one token.  Two implementations:
+
+  DenseBackend   wraps the concrete per-layer ``lm.Cache`` pytree — the
+                 training/dry-run storage.  Reads of ``.k``/``.v``/
+                 ``.length`` forward to the cache, so code written against
+                 the old concrete-Cache API keeps working.
+  PagedBackend   per-sequence block tables over a layered ``BlockPool``
+                 (one block id addresses a token-chunk's KV for *every*
+                 layer — a single MARS placement decision co-locates a
+                 token's per-layer blocks in one DRAM row group).  Supports
+                 ragged continuous-batching decode, prefix sharing and
+                 copy-on-write forks, and is what ``serve.engine`` drives.
+
+Decode through the paged backend gathers each lane's pages into a dense
+per-layer view and runs the *same* ``lm.dense_decode_step`` math as the
+dense backend (per-sequence write positions), so dense and paged logits
+agree for every attention family; the new token's K/V is extracted from
+the step and written back into the pool host-side (the pool mutates in
+place, exactly like the single-layer engine of PR 1).
+
+Adding a backend: implement ``prefill``/``decode_step``/``lengths``/
+``release`` against ``lm.prefill_parts`` (storage-agnostic prompt run)
+and ``lm.dense_decode_step`` (ragged one-token step), register a
+constructor in ``make_backend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Protocol, Sequence, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache.pool import BlockPool, PoolConfig
+from repro.kvcache.prefix import BlockTable, PrefixCache
+from repro.models.config import ModelConfig
+
+
+@runtime_checkable
+class KVBackend(Protocol):
+    """What the model needs from its KV storage — nothing more."""
+
+    cfg: ModelConfig
+
+    def prefill(self, params, tokens, frontend_emb=None):
+        """Run a (B, S) prompt batch, storing all layers' K/V.
+        Returns last-position logits (B, 1, V)."""
+        ...
+
+    def decode_step(self, params, tokens):
+        """Advance every lane one token.  tokens: (B, 1) int32 inputs.
+        Returns next-token logits (B, 1, V)."""
+        ...
+
+    @property
+    def lengths(self) -> np.ndarray:
+        """Per-lane cached token counts, int32 (B,)."""
+        ...
+
+    def release(self) -> None:
+        """Drop all storage (paged: decref blocks back to the pool)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Dense backend
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dense_decode(params, cfg, tokens, cache):
+    from repro.models import lm
+    return lm.dense_decode_step(params, cfg, tokens, cache)
+
+
+class DenseBackend:
+    """The old concrete ``lm.Cache`` behind the backend interface."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, max_seq: int,
+                 enc_len: int = 0):
+        from repro.models import lm
+        self.cfg = cfg
+        self.batch = batch
+        self.max_seq = max_seq
+        self._cache = lm.init_dense_cache(cfg, batch, max_seq, enc_len)
+
+    # -- backend API --------------------------------------------------------
+
+    def prefill(self, params, tokens, frontend_emb=None):
+        from repro.models import lm
+        logits, self._cache = lm.dense_prefill(
+            params, self.cfg, tokens, self.max_seq, frontend_emb)
+        return logits
+
+    def decode_step(self, params, tokens):
+        logits, self._cache = _dense_decode(params, self.cfg, tokens,
+                                            self._cache)
+        return logits
+
+    @property
+    def lengths(self) -> np.ndarray:
+        ln = np.asarray(self._cache.length, np.int32)
+        return np.broadcast_to(np.atleast_1d(ln), (self.batch,)).copy()
+
+    def release(self) -> None:
+        self._cache = None
+
+    # -- concrete-Cache compatibility reads ---------------------------------
+
+    @property
+    def cache(self):
+        return self._cache
+
+    def __getattr__(self, name):
+        # k / v / ssm / conv / xk / xv / length forwarded to the pytree
+        if name in ("k", "v", "ssm", "conv", "xk", "xv", "length"):
+            return getattr(self._cache, name)
+        raise AttributeError(name)
+
+
+# ---------------------------------------------------------------------------
+# Paged backend
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _paged_decode(params, cfg, tokens, k_pages, v_pages, page_tables,
+                  lengths):
+    """Gather each lane's pages into a dense per-layer view, run the ragged
+    dense decode step, and extract the new token's K/V for write-back.
+
+    k/v_pages: (L, P, page, K, dh); page_tables: (B, n_pages) int32;
+    lengths: (B,) int32 — the padded view always has room for slot
+    ``lengths[b]`` (the backend pads the table before calling).
+    Returns (logits, k_new (L, B, 1, K, dh), v_new).
+    """
+    from repro.models import lm
+    L = k_pages.shape[0]
+    K, dh = k_pages.shape[-2:]
+    B = tokens.shape[0]
+    k = k_pages[:, page_tables].reshape(L, B, -1, K, dh)
+    v = v_pages[:, page_tables].reshape(L, B, -1, K, dh)
+    cache = lm.Cache(k=k, v=v, ssm=None, conv=None, xk=None, xv=None,
+                     length=lengths)
+    logits, new = lm.dense_decode_step(params, cfg, tokens, cache)
+    idx = lengths.astype(jnp.int32)[None, :, None, None, None]
+    k_new = jnp.take_along_axis(new.k, idx, axis=2)
+    v_new = jnp.take_along_axis(new.v, idx, axis=2)
+    return logits, k_new, v_new
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _jit_prefill_parts(params, cfg, tokens):
+    from repro.models import lm
+    return lm.prefill_parts(params, cfg, tokens)
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass
+class _PagedSeq:
+    sid: int
+    table: BlockTable
+    tokens: list            # tokens whose KV is cached
+
+
+class PagedBackend:
+    """Per-sequence block tables over a layered ``BlockPool``.
+
+    Sequence-level API (what the serve engine drives): ``new_seq`` /
+    ``fork_seq`` / ``decode`` / ``free_seq``.  The batch-level
+    ``KVBackend`` API (``prefill`` / ``decode_step``) runs the same
+    machinery over a fixed batch, giving drop-in parity with
+    ``DenseBackend``.
+
+    Prompt K/V is always recomputed (prefill logits need the full
+    context); prefix sharing is at the *storage* level — matched blocks
+    are referenced instead of re-allocated, which is what bounds pool
+    occupancy under hot prefixes.
+    """
+
+    def __init__(self, cfg: ModelConfig, pool: Optional[BlockPool] = None,
+                 *, num_blocks: int = 256, block_size: int = 16,
+                 placement: str = "mars", eviction: str = "fifo",
+                 share_prefixes: bool = True):
+        if not cfg.has_attention or cfg.has_ssm or cfg.enc_layers \
+                or cfg.family in ("encdec", "vlm"):
+            raise NotImplementedError(
+                f"PagedBackend pages attention KV only; family "
+                f"{cfg.family!r} needs state the pool does not hold yet")
+        self.cfg = cfg
+        if pool is None:
+            pool = BlockPool(PoolConfig(
+                num_blocks=num_blocks, block_size=block_size,
+                placement=placement, eviction=eviction,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.d_head,
+                n_layers=cfg.n_layers, dtype=str(cfg.kvdtype)))
+        assert pool.k_pages is not None, "paged backend needs a KV pool"
+        assert pool.cfg.n_layers == cfg.n_layers \
+            and pool.cfg.n_kv_heads == cfg.n_kv_heads \
+            and pool.cfg.head_dim == cfg.d_head, \
+            "pool KV buffer does not match the model config"
+        self.pool = pool
+        self.prefix = PrefixCache(pool.cfg.block_size)
+        if share_prefixes:
+            self.prefix.attach(pool)
+        self.share_prefixes = share_prefixes
+        self._seqs: dict[int, _PagedSeq] = {}
+        self._next_sid = 0
+        self._batch: list[int] = []      # batch-level API lane order
+
+    # -- sequence-level API (continuous batching) ---------------------------
+
+    def new_seq(self, params, prompt: Sequence[int],
+                on_alloc: Optional[Callable[[int, int], None]] = None
+                ) -> tuple[int, Any, int]:
+        """Prefill one sequence.  Returns (sid, last-position logits
+        (1, V), shared-prefix token count)."""
+        logits, sids, shared = self._add_seqs(
+            params, np.asarray([list(prompt)], np.int32), on_alloc)
+        return sids[0], logits[0], shared[0]
+
+    def _add_seqs(self, params, tokens: np.ndarray,
+                  on_alloc=None) -> tuple[Any, list[int], list[int]]:
+        """Batched prompt prefill -> one new sequence per row."""
+        B, S = tokens.shape
+        bs = self.pool.cfg.block_size
+        logits, parts = _jit_prefill_parts(
+            params, self.cfg, jnp.asarray(tokens, jnp.int32))
+        kvd = self.cfg.kvdtype
+        k_all = np.asarray(parts["k"].astype(kvd))   # (L, B, S, K, dh)
+        v_all = np.asarray(parts["v"].astype(kvd))
+        sids, shared = [], []
+        for b in range(B):
+            prompt = [int(t) for t in tokens[b]]
+            if self.share_prefixes:
+                bids, n = self.prefix.match(prompt, self.pool)
+            else:
+                bids, n = [], 0
+            table = BlockTable(list(bids), n)
+            allocs0 = self.pool.stats.allocs
+            table.extend(self.pool, prompt[n:], seq_tokens=prompt,
+                         cache=self.prefix if self.share_prefixes else None,
+                         kv=(k_all[:, b, n:], v_all[:, b, n:]))
+            sid = self._next_sid
+            self._next_sid += 1
+            self._seqs[sid] = _PagedSeq(sid, table, list(prompt))
+            if on_alloc is not None:
+                on_alloc(sid, self.pool.stats.allocs - allocs0)
+            sids.append(sid)
+            shared.append(n)
+        return np.asarray(logits[:, 0], np.float32), sids, shared
+
+    def fork_seq(self, sid: int) -> int:
+        """Fork a sequence, sharing every block (CoW on first append)."""
+        src = self._seqs[sid]
+        nsid = self._next_sid
+        self._next_sid += 1
+        self._seqs[nsid] = _PagedSeq(nsid, src.table.fork(self.pool),
+                                     list(src.tokens))
+        return nsid
+
+    def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
+               on_alloc: Optional[Callable[[int, int], None]] = None):
+        """One ragged decode step: feed ``tokens[i]`` to sequence
+        ``sids[i]``, cache its K/V, return next-token logits (n, V)."""
+        assert sids, "no active sequences to decode (prefill first)"
+        seqs = [self._seqs[s] for s in sids]
+        B = len(seqs)
+        page = self.pool.cfg.block_size
+        # padded page-table view: every lane needs room for slot len(seq)
+        n_pages = _pow2(max(
+            -(-(len(s.tokens) + 1) // page) for s in seqs))
+        Bp = _pow2(B)                       # lane padding bounds recompiles
+        pt = np.zeros((Bp, n_pages), np.int32)
+        lengths = np.zeros(Bp, np.int32)
+        for i, s in enumerate(seqs):
+            pt[i, :len(s.table.blocks)] = s.table.blocks
+            lengths[i] = s.table.num_tokens
+        toks = np.zeros((Bp, 1), np.int32)
+        toks[:B, 0] = list(tokens)
+        kp = jnp.asarray(self.pool.k_pages)
+        vp = jnp.asarray(self.pool.v_pages)
+        logits, k_new, v_new = _paged_decode(
+            params, self.cfg, jnp.asarray(toks), kp, vp,
+            jnp.asarray(pt), jnp.asarray(lengths))
+        k_new = np.asarray(k_new)           # (L, Bp, 1, K, dh)
+        v_new = np.asarray(v_new)
+        for i, (s, tok) in enumerate(zip(seqs, tokens)):
+            allocs0 = self.pool.stats.allocs
+            s.tokens.append(int(tok))
+            s.table.extend(
+                self.pool, [int(tok)], seq_tokens=s.tokens,
+                cache=self.prefix if self.share_prefixes else None,
+                kv=(k_new[:, i], v_new[:, i]))
+            if on_alloc is not None:
+                on_alloc(s.sid, self.pool.stats.allocs - allocs0)
+        return np.asarray(logits[:B, 0], np.float32)
+
+    def free_seq(self, sid: int) -> None:
+        """Finished sequence: registered prefix blocks stay evictable."""
+        seq = self._seqs.pop(sid)
+        self.prefix.release(seq.table, self.pool)
+
+    def table(self, sid: int) -> BlockTable:
+        return self._seqs[sid].table
+
+    def block_of(self, sid: int, layer: int, token_index: int) -> int:
+        """Pool block holding a token's KV for one layer — the layer axis
+        shares the block id, so one placement covers all layers."""
+        assert 0 <= layer < self.cfg.n_layers
+        seq = self._seqs[sid]
+        assert token_index < seq.table.num_tokens
+        return seq.table.blocks[token_index // self.pool.cfg.block_size]
+
+    # -- batch-level KVBackend API ------------------------------------------
+
+    def prefill(self, params, tokens, frontend_emb=None):
+        assert frontend_emb is None, "paged backend has no frontend state"
+        for sid in self._batch:      # re-prefill replaces the batch lanes
+            self.free_seq(sid)
+        logits, self._batch, _ = self._add_seqs(params, np.asarray(tokens))
+        return jnp.asarray(logits)[:, None, :]
+
+    def decode_step(self, params, tokens):
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        logits = self.decode(params, self._batch, toks)
+        return jnp.asarray(logits)[:, None, :]
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return np.asarray(
+            [self._seqs[s].table.num_tokens for s in self._batch], np.int32)
+
+    def release(self) -> None:
+        for sid in list(self._seqs):
+            self.free_seq(sid)
+        self._batch = []
+
+
+def make_backend(cfg: ModelConfig, kind: str = "dense", *,
+                 batch: int = 1, max_seq: int = 0, enc_len: int = 0,
+                 pool: Optional[BlockPool] = None, **kw) -> KVBackend:
+    """Backend registry: "dense" | "paged"."""
+    if kind == "dense":
+        return DenseBackend(cfg, batch, max_seq, enc_len)
+    if kind == "paged":
+        if pool is None and "num_blocks" not in kw and max_seq:
+            # honor the caller's capacity request: room for `batch` lanes
+            # of max_seq tokens (+1 decode slot each)
+            bs = kw.get("block_size", 16)
+            kw["num_blocks"] = batch * (-(-(max_seq + 1) // bs))
+        return PagedBackend(cfg, pool, **kw)
+    raise ValueError(f"unknown KV backend kind {kind!r}")

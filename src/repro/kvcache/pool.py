@@ -4,11 +4,18 @@ Bookkeeping mirrors the fixed-array style of the MARS engine
 (``core.mars``): an occupancy bit-vector (``used``, the RequestQ
 ``rq_valid`` analogue), a refcount array, and first-arrival / last-use
 ticks per block.  The physical KV storage is a pair of arrays of shape
-``(num_blocks, block_size, n_kv_heads, head_dim)`` allocated once up
-front (host-resident, mutated in place; the engine stages them to device
-per step) — block ids index directly into the paged-attention kernel's
-``k_pages``/``v_pages`` operands, so the allocator's placement decisions
-*are* the kernel's gather addresses.
+``(n_layers, num_blocks, block_size, n_kv_heads, head_dim)`` allocated
+once up front (host-resident, mutated in place; the engine stages them to
+device per step) — block ids index directly into the paged-attention
+kernel's ``k_pages``/``v_pages`` operands, so the allocator's placement
+decisions *are* the kernel's gather addresses.
+
+The leading **layer axis** makes one block id address a token-chunk's KV
+for *every* model layer at once: a multi-layer LM (``kvcache.backend``)
+keeps a single block table per sequence, and one placement decision
+co-locates a token's per-layer blocks in the same DRAM row group — the
+multi-layer rendering of MARS placement the single-layer engine of PR 1
+could not express.
 
 Blocks move through three states::
 
@@ -35,6 +42,16 @@ from repro.kvcache.placement import PlacementPolicy
 LINES_PER_BLOCK = 64
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, falling back to ml_dtypes for the low-precision
+    names numpy lacks (bfloat16, float8_*) — available wherever jax is."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
     num_blocks: int = 256
@@ -45,6 +62,7 @@ class PoolConfig:
     # KV buffer shape; None = metadata-only pool (simulation / tests)
     n_kv_heads: Optional[int] = None
     head_dim: Optional[int] = None
+    n_layers: int = 1             # leading layer axis of the KV buffer
     dtype: str = "float32"
 
 
@@ -87,9 +105,10 @@ class BlockPool:
         # once per engine step when the kernel consumes it
         self.k_pages = self.v_pages = None
         if cfg.n_kv_heads is not None and cfg.head_dim is not None:
-            shape = (n, cfg.block_size, cfg.n_kv_heads, cfg.head_dim)
-            self.k_pages = np.zeros(shape, cfg.dtype)
-            self.v_pages = np.zeros(shape, cfg.dtype)
+            shape = (cfg.n_layers, n, cfg.block_size,
+                     cfg.n_kv_heads, cfg.head_dim)
+            self.k_pages = np.zeros(shape, _np_dtype(cfg.dtype))
+            self.v_pages = np.zeros(shape, _np_dtype(cfg.dtype))
 
     # -- capacity -----------------------------------------------------------
 
@@ -197,19 +216,25 @@ class BlockPool:
     # -- KV payload ---------------------------------------------------------
 
     def write_kv(self, bid: int, offset: int, k, v) -> None:
-        """Write ``t`` token KV rows into a block at ``offset``.
-        k/v: (t, n_kv_heads, head_dim)."""
-        t = k.shape[0]
+        """Write ``t`` token KV rows into a block at ``offset``, for every
+        layer plane at once.  k/v: (n_layers, t, n_kv_heads, head_dim);
+        a layerless (t, n_kv_heads, head_dim) is accepted when the pool has
+        a single layer plane (the PR-1 single-layer engine path)."""
+        k, v = np.asarray(k), np.asarray(v)
+        if k.ndim == 3:
+            assert self.cfg.n_layers == 1, "layered pool needs layered KV"
+            k, v = k[None], v[None]
+        t = k.shape[1]
         assert offset + t <= self.cfg.block_size
-        self.k_pages[bid, offset:offset + t] = np.asarray(k)
-        self.v_pages[bid, offset:offset + t] = np.asarray(v)
+        self.k_pages[:, bid, offset:offset + t] = k
+        self.v_pages[:, bid, offset:offset + t] = v
 
     def copy_block(self, src: int, dst: int) -> None:
-        """Copy-on-write payload copy (content tag + KV rows)."""
+        """Copy-on-write payload copy (content tag + all layer planes)."""
         self.content[dst] = self.content[src]
         if self.k_pages is not None:
-            self.k_pages[dst] = self.k_pages[src]
-            self.v_pages[dst] = self.v_pages[src]
+            self.k_pages[:, dst] = self.k_pages[:, src]
+            self.v_pages[:, dst] = self.v_pages[:, src]
         self.stats.cow_copies += 1
 
     # -- invariants ---------------------------------------------------------

@@ -44,8 +44,9 @@ class BlockTable:
         """Append ``tokens`` (the new suffix of ``seq_tokens``), allocating
         and copy-on-writing blocks as needed.
 
-        ``kv``: optional (k, v) arrays of shape (len(tokens), Hkv, D) to
-        store into the pool's KV buffer alongside the token tags.
+        ``kv``: optional (k, v) arrays of shape (len(tokens), Hkv, D) —
+        or (n_layers, len(tokens), Hkv, D) for a layered pool — to store
+        into the pool's KV buffer alongside the token tags.
         """
         bs = pool.cfg.block_size
         assert len(seq_tokens) == self.num_tokens + len(tokens)
@@ -69,8 +70,9 @@ class BlockTable:
             pool.content[bid] = prev + chunk
             if kv is not None:
                 k, v = kv
-                pool.write_kv(bid, fill, k[done:done + take],
-                              v[done:done + take])
+                # token axis is -3 for both layerless and layered shapes
+                pool.write_kv(bid, fill, k[..., done:done + take, :, :],
+                              v[..., done:done + take, :, :])
             pool.touch(bid)
             self.num_tokens += take
             done += take

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve.step import make_decode_step
+from repro.serve.step import greedy_generate
 from repro.serving.scheduler import MarsScheduler, Request, \
     unique_prefix_blocks
 
@@ -39,10 +39,10 @@ def synth_requests(n: int, vocab: int, n_prefixes: int = 8,
     return out
 
 
-def main_paged(args):
-    """Continuous batching over the paged KV pool (``serve.engine``):
-    admission bounded by pool capacity, prefix-shared blocks, MARS-aware
-    placement, copy-on-write forks."""
+def main_paged_toy(args):
+    """Continuous batching over the paged KV pool (``serve.engine``) with
+    the deterministic single-layer ToyModel: admission bounded by pool
+    capacity, prefix-shared blocks, MARS-aware placement, CoW forks."""
     from repro.kvcache import BlockPool, PoolConfig
     from repro.serve.engine import ServeEngine
 
@@ -57,6 +57,7 @@ def main_paged(args):
     finished = eng.run(reqs)
     dt = time.time() - t0
     print(f"[serve --paged] served={len(finished)} steps={eng.stats.steps} "
+          f"prefill_tokens={eng.stats.prefill_tokens} "
           f"decode_tokens={eng.stats.decode_tokens} "
           f"prefix_hits={pool.stats.prefix_hits} "
           f"shared_prompt_tokens={eng.stats.shared_prompt_tokens} "
@@ -68,16 +69,73 @@ def main_paged(args):
                 pool_rejects=sched.stats.pool_rejects)
 
 
+def main_paged(args):
+    """Full-LM paged serving: a real ``ModelConfig`` model decoded through
+    ``PagedBackend`` by the continuous-batching engine — every layer's KV
+    in the layered block pool, ragged lanes, prefix sharing, CoW forks.
+    Cross-checks a sample of served sequences against the dense backend
+    (``greedy_generate``) for logit/token parity."""
+    if args.toy:
+        return main_paged_toy(args)
+    from repro.kvcache.backend import PagedBackend
+    from repro.serve.engine import PagedLM, ServeEngine
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    assert cfg.n_layers > 1, "full-LM paged serving needs a multi-layer cfg"
+    params = lm.init(cfg, jax.random.key(0)).params
+    backend = PagedBackend(cfg, num_blocks=args.pool_blocks, block_size=16)
+    pool = backend.pool
+    sched = MarsScheduler(pool=pool)
+    eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
+                      max_lanes=args.batch)
+    reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
+                    prefix_len=r.prefix_len, max_new=args.new_tokens)
+            for r in synth_requests(args.requests, vocab=cfg.vocab)]
+    t0 = time.time()
+    finished = eng.run(reqs)
+    dt = time.time() - t0
+    pool.check_invariants()
+    print(f"[serve --paged {cfg.name}] layers={cfg.n_layers} "
+          f"served={len(finished)} steps={eng.stats.steps} "
+          f"prefill_tokens={eng.stats.prefill_tokens} "
+          f"decode_tokens={eng.stats.decode_tokens} "
+          f"prefix_hits={pool.stats.prefix_hits} "
+          f"evictions={pool.stats.evictions} "
+          f"pool_rejects={sched.stats.pool_rejects} wall={dt:.1f}s")
+
+    # dense-vs-paged parity on a sample of served requests (salt-0 lane of
+    # each request is plain greedy — must match the dense backend exactly)
+    n_check = min(args.parity_checks, len(reqs))
+    mismatches = 0
+    for req in reqs[:n_check]:
+        prompt = jnp.asarray([req.prompt], jnp.int32)
+        want = greedy_generate(params, cfg, prompt, args.new_tokens,
+                               max_seq=len(req.prompt) + args.new_tokens + 1)
+        got = finished[req.rid][0]
+        if got != list(np.asarray(want[0])):
+            mismatches += 1
+    print(f"[serve --paged {cfg.name}] dense-vs-paged parity: "
+          f"{n_check - mismatches}/{n_check} sequences match")
+    assert mismatches == 0, "paged serving diverged from the dense backend"
+    return dict(served=len(finished), steps=eng.stats.steps,
+                prefix_hits=pool.stats.prefix_hits,
+                parity_checked=n_check)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--arch", "--config", dest="arch", default="qwen1_5_0_5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--paged", action="store_true",
-                    help="serve through the paged KV-cache block pool")
+                    help="serve a real config through the paged KV backend")
+    ap.add_argument("--toy", action="store_true",
+                    help="with --paged: single-layer ToyModel engine demo")
     ap.add_argument("--pool-blocks", type=int, default=256)
+    ap.add_argument("--parity-checks", type=int, default=4,
+                    help="with --paged: served sequences re-checked densely")
     args = ap.parse_args(argv)
 
     if args.paged:
@@ -86,7 +144,6 @@ def main(argv=None):
     cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)
     params = lm.init(cfg, jax.random.key(0)).params
-    decode = jax.jit(make_decode_step(cfg))
 
     reqs = synth_requests(args.requests, cfg.vocab)
     results = {}
@@ -105,13 +162,11 @@ def main(argv=None):
                 break
             blocks += unique_prefix_blocks(batch)
             batches += 1
-            # run the batch: prefill the (page-shared) prompts + decode
+            # run the batch through the dense KV backend: prefill the
+            # (page-shared) prompts + greedy decode
             prompts = jnp.asarray([r.prompt for r in batch], jnp.int32)
-            max_seq = prompts.shape[1] + args.new_tokens
-            _, cache = lm.prefill(params, cfg, prompts, max_seq=max_seq)
-            tok = prompts[:, -1:]
-            for _ in range(args.new_tokens):
-                tok, _, cache = decode(params, cache, tok)
+            greedy_generate(params, cfg, prompts, args.new_tokens + 1,
+                            max_seq=prompts.shape[1] + args.new_tokens + 1)
             served += len(batch)
         dt = time.time() - t0
         results[mars] = dict(served=served, batches=batches,

@@ -252,6 +252,13 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions, mask,
             if cache_positions is None:
                 k = jnp.concatenate([ck, k], axis=1)
                 v = jnp.concatenate([cv, v], axis=1)
+            elif getattr(cache_positions, "ndim", 0):
+                # ragged decode: one write position per sequence (paged /
+                # continuous-batching lanes advance independently)
+                upd = jax.vmap(lambda c, u, pos: jax.lax.
+                               dynamic_update_slice_in_dim(c, u, pos, axis=0))
+                k = upd(ck, k.astype(ck.dtype), cache_positions)
+                v = upd(cv, v.astype(cv.dtype), cache_positions)
             else:
                 k = jax.lax.dynamic_update_slice_in_dim(
                     ck, k.astype(ck.dtype), cache_positions, axis=1)

@@ -268,7 +268,7 @@ def forward(params, cfg: ModelConfig, tokens, frontend_emb=None,
 
 
 # ---------------------------------------------------------------------------
-# Serving cache
+# Serving cache — dense storage (the DenseBackend's pytree)
 # ---------------------------------------------------------------------------
 
 @jax.tree_util.register_dataclass
@@ -280,11 +280,13 @@ class Cache:
     conv: Any         # (L, B, k-1, ch) or None
     xk: Any           # (L, B, Senc, K, dh) or None (encdec)
     xv: Any
-    length: Any       # int32 scalar — tokens already in cache
+    length: Any       # int32 — tokens already cached; scalar, or (B,) for
+                      # ragged (per-sequence) decode
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               enc_len: int = 0) -> Cache:
+def init_dense_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     enc_len: int = 0) -> Cache:
+    """The dense per-layer storage pytree (jit/sharding friendly)."""
     L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
     cd = cfg.kvdtype
     k = v = ssm = conv = xk = xv = None
@@ -301,16 +303,41 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return Cache(k, v, ssm, conv, xk, xv, jnp.zeros((), jnp.int32))
 
 
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0, kind: str = "dense", **backend_kw):
+    """Build a KV backend (``kind``: "dense" | "paged").
+
+    The serving entry point of the KVBackend API: returns a
+    ``kvcache.backend.KVBackend`` whose ``prefill``/``decode_step`` drive
+    this model.  ``DenseBackend`` forwards ``.k``/``.v``/``.length`` reads
+    to its underlying ``Cache``, so code written against the old concrete
+    cache keeps working.
+    """
+    from repro.kvcache.backend import make_backend
+    return make_backend(cfg, kind, batch=batch, max_seq=max_seq,
+                        enc_len=enc_len, **backend_kw)
+
+
 def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
                    enc_len: int = 0):
-    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, enc_len))
+    """Shape-only dense storage pytree (dry-run / sharding planning)."""
+    return jax.eval_shape(
+        lambda: init_dense_cache(cfg, batch, max_seq, enc_len))
 
 
-def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
-    """One-token decode.  tokens: (B, 1) int32.  Returns (logits, cache)."""
+def dense_decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
+    """One-token decode against dense storage (pure; jit/shard friendly).
+
+    tokens: (B, 1) int32.  ``cache.length`` may be a scalar (all lanes at
+    the same position) or an int32 (B,) vector for ragged decode — the
+    paged backend decodes continuous-batching lanes whose sequences have
+    different lengths in one call.  Returns (logits, cache).
+    """
     B = tokens.shape[0]
-    pos = cache.length
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    pos = jnp.asarray(cache.length)
+    ragged = pos.ndim > 0
+    posv = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
+    positions = posv[:, None]
     x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
 
     masks = None
@@ -318,16 +345,17 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
     if cfg.has_attention:
         Smax = cache.k.shape[2]
         kpos = jnp.arange(Smax)[None, :]
-        m_causal = kpos <= pos
+        m_causal = kpos <= posv[:, None]
         m = m_causal
         if cfg.sliding_window:
-            m = m_causal & (kpos > pos - cfg.sliding_window)
+            m = m_causal & (kpos > posv[:, None] - cfg.sliding_window)
         masks = (m[:, None, None, :] if cfg.sliding_window else
                  m_causal[:, None, None, :],
                  m_causal[:, None, None, :])
         kv = (cache.k, cache.v)
     ssm_states = (cache.ssm, cache.conv) if cfg.has_ssm else None
     xkv = (cache.xk, cache.xv) if cfg.family == "encdec" else None
+    cache_pos = posv if ragged else pos
 
     nd = cfg.n_dense_layers if cfg.is_moe else 0
     ys_all = {}
@@ -335,7 +363,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
         kv_d = jax.tree.map(lambda a: a[:nd], kv) if kv is not None else None
         x, _, ys = _scan_blocks(params["blocks_dense"], x, cfg, masks=masks,
                                 positions=positions, layer_offset=0, n=nd,
-                                kv=kv_d, cache_pos=pos,
+                                kv=kv_d, cache_pos=cache_pos,
                                 ssm_states=jax.tree.map(
                                     lambda a: a[:nd], ssm_states)
                                 if ssm_states else None)
@@ -343,7 +371,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
     kv_m = jax.tree.map(lambda a: a[nd:], kv) if kv is not None else None
     x, _, ys = _scan_blocks(
         params["blocks"], x, cfg, masks=masks, positions=positions,
-        layer_offset=nd, n=cfg.n_layers - nd, kv=kv_m, cache_pos=pos,
+        layer_offset=nd, n=cfg.n_layers - nd, kv=kv_m, cache_pos=cache_pos,
         ssm_states=jax.tree.map(lambda a: a[nd:], ssm_states)
         if ssm_states else None,
         xkv=xkv)
@@ -370,13 +398,26 @@ def decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
     return logits, new_cache
 
 
-def prefill(params, cfg: ModelConfig, tokens, max_seq: int,
-            frontend_emb=None):
-    """Run the prompt through the model, building the cache."""
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """One-token decode.  ``cache`` is either a concrete dense ``Cache``
+    pytree (pure path, used under jit by the dry-run and the dense
+    backend) or any ``KVBackend``.  Returns (logits, cache)."""
+    if isinstance(cache, Cache):
+        return dense_decode_step(params, cfg, tokens, cache)
+    logits = cache.decode_step(params, tokens)
+    return logits, cache
+
+
+def prefill_parts(params, cfg: ModelConfig, tokens, frontend_emb=None):
+    """Run the prompt, returning last-position logits plus every cacheable
+    part — the storage-agnostic half of prefill that both backends share.
+
+    Returns (logits (B,1,V), parts) with parts:
+      k/v   (L, B, S, K, dh) or None   (post-RoPE, compute dtype)
+      ssm   (L, B, H, P, N) or None    conv (L, B, k-1, ch) or None
+      xk/xv (L, B, Senc, K, dh) or None
+    """
     B, S = tokens.shape
-    cache = init_cache(cfg, B, max_seq,
-                       enc_len=frontend_emb.shape[1]
-                       if cfg.family == "encdec" else 0)
     positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
     x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
     xkv = None
@@ -408,19 +449,54 @@ def prefill(params, cfg: ModelConfig, tokens, max_seq: int,
             parts.append(ys_all["main"][name][idx])
         return jnp.concatenate(parts, 0) if parts else None
 
+    parts = {
+        "k": _cat("kv", 0) if cfg.has_attention else None,
+        "v": _cat("kv", 1) if cfg.has_attention else None,
+        "ssm": _cat("ssm", 0) if cfg.has_ssm else None,
+        "conv": _cat("ssm", 1) if cfg.has_ssm else None,
+        "xk": xkv[0] if xkv is not None else None,
+        "xv": xkv[1] if xkv is not None else None,
+    }
+    return logits, parts
+
+
+def dense_prefill(params, cfg: ModelConfig, tokens, max_seq: int,
+                  frontend_emb=None):
+    """Prompt -> (logits, concrete dense Cache)."""
+    B, S = tokens.shape
+    cache = init_dense_cache(cfg, B, max_seq,
+                             enc_len=frontend_emb.shape[1]
+                             if cfg.family == "encdec" else 0)
+    logits, parts = prefill_parts(params, cfg, tokens, frontend_emb)
     if cfg.has_attention:
-        knew, vnew = _cat("kv", 0), _cat("kv", 1)
         cache.k = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, knew.astype(cache.k.dtype), 0, axis=2)
+            cache.k, parts["k"].astype(cache.k.dtype), 0, axis=2)
         cache.v = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, vnew.astype(cache.v.dtype), 0, axis=2)
+            cache.v, parts["v"].astype(cache.v.dtype), 0, axis=2)
     if cfg.has_ssm:
-        cache.ssm = _cat("ssm", 0)
-        cache.conv = _cat("ssm", 1)
-    if cfg.family == "encdec" and xkv is not None:
-        cache.xk, cache.xv = xkv
+        cache.ssm = parts["ssm"]
+        cache.conv = parts["conv"]
+    if cfg.family == "encdec":
+        cache.xk, cache.xv = parts["xk"], parts["xv"]
     cache.length = jnp.asarray(S, jnp.int32)
     return logits, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_seq: int = 0,
+            frontend_emb=None, backend=None):
+    """Run the prompt through the model, building the serving cache.
+
+    Returns (logits, backend).  With ``backend=None`` a ``DenseBackend``
+    sized by ``max_seq`` is created; pass a ``PagedBackend`` to prefill
+    into pool block tables instead.
+    """
+    if backend is None:
+        assert max_seq, "prefill needs max_seq (or an explicit backend)"
+        backend = init_cache(cfg, tokens.shape[0], max_seq,
+                             enc_len=frontend_emb.shape[1]
+                             if cfg.family == "encdec" else 0)
+    logits = backend.prefill(params, tokens, frontend_emb=frontend_emb)
+    return logits, backend
 
 
 def loss_fn(params, cfg: ModelConfig, tokens, labels, frontend_emb=None,

@@ -6,21 +6,28 @@ The loop ties the whole MARS serving stack together, one step per call:
            admits against pool capacity) into free decode lanes
   prefill  match the prompt against the prefix cache (ref-counted shared
            blocks), allocate the rest MARS-placed, write prompt KV
-  decode   one token for every running lane through ``paged_attention``
-           reading the pool's block tables; appends copy-on-write when a
+  decode   one token for every running lane; appends copy-on-write when a
            forked lane shares its tail block
   free     finished lanes release references; registered prefix blocks
            stay resident as evictable cache
 
-The model is pluggable; ``ToyModel`` is a deterministic single-layer
-attention LM (fixed random embeddings + readout) so tests can check the
-served tokens are bit-identical whether KV lives densely or paged, shared
-or copy-on-written.
+Two model drivers:
+
+  ``ToyModel``   deterministic single-layer attention LM (fixed random
+                 embeddings + readout) decoded inline through
+                 ``paged_attention`` — tests check the served tokens are
+                 bit-identical whether KV lives densely or paged.
+  ``PagedLM``    a real ``ModelConfig`` model (params + config) decoded
+                 through ``kvcache.backend.PagedBackend``: every layer's
+                 KV lives in the layered block pool, lanes decode ragged
+                 (each at its own length) in one batched step, forks share
+                 blocks copy-on-write.  Greedy sampling plus a per-fork
+                 salt so parallel samples diverge.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,6 +66,28 @@ class ToyModel:
         return (np.argmax(logits, -1) + np.asarray(salt)) % self.vocab
 
 
+class PagedLM:
+    """Real-LM engine driver: (params, cfg) served through a PagedBackend."""
+
+    def __init__(self, params, cfg, backend):
+        from repro.kvcache.backend import PagedBackend
+        assert isinstance(backend, PagedBackend)
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+
+    def next_token(self, logits, salt: int) -> int:
+        """Greedy + per-fork salt (parallel samples diverge like ToyModel)."""
+        return (int(np.argmax(np.asarray(logits, np.float32))) + salt) \
+            % self.cfg.vocab
+
+
+def make_paged_lm(params, cfg, pool: Optional[BlockPool] = None,
+                  **backend_kw) -> PagedLM:
+    from repro.kvcache.backend import PagedBackend
+    return PagedLM(params, cfg, PagedBackend(cfg, pool, **backend_kw))
+
+
 @dataclasses.dataclass
 class SeqState:
     rid: int
@@ -68,6 +97,8 @@ class SeqState:
     salt: int = 0                # distinguishes forked samples
     n_generated: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
+    sid: int = -1                # PagedBackend sequence id (PagedLM driver)
+    pending: Optional[int] = None  # first token, produced by prefill logits
 
     @property
     def done(self) -> bool:
@@ -78,21 +109,31 @@ class SeqState:
 class EngineStats:
     steps: int = 0
     prefills: int = 0
-    decode_tokens: int = 0
+    prefill_tokens: int = 0      # prompt tokens run through prefill
+    decode_tokens: int = 0       # generated tokens
     shared_prompt_tokens: int = 0
 
 
 class ServeEngine:
     def __init__(self, pool: BlockPool, scheduler: MarsScheduler,
-                 model: Optional[ToyModel] = None, *, max_lanes: int = 8,
-                 use_kernel: bool = False):
+                 model: Optional[Union[ToyModel, PagedLM]] = None, *,
+                 max_lanes: int = 8, use_kernel: bool = False):
         assert pool.k_pages is not None, "engine needs a pool with KV buffers"
         self.pool = pool
-        self.cache = PrefixCache(pool.cfg.block_size)
-        self.cache.attach(pool)
         self.scheduler = scheduler
-        self.model = model or ToyModel(n_kv_heads=pool.cfg.n_kv_heads,
-                                       head_dim=pool.cfg.head_dim)
+        if isinstance(model, PagedLM):
+            assert model.backend.pool is pool, \
+                "PagedLM backend must share the engine's pool"
+            assert not use_kernel, \
+                "PagedLM decodes through the gathered dense view; the " \
+                "Pallas kernel path is ToyModel-only (see ROADMAP)"
+            self.model = model
+            self.cache = model.backend.prefix
+        else:
+            self.model = model or ToyModel(n_kv_heads=pool.cfg.n_kv_heads,
+                                           head_dim=pool.cfg.head_dim)
+            self.cache = PrefixCache(pool.cfg.block_size)
+            self.cache.attach(pool)
         self.max_lanes = max_lanes
         self.use_kernel = use_kernel
         self.running: list[SeqState] = []
@@ -103,6 +144,11 @@ class ServeEngine:
         # release when the request's last lane finishes
         self._claims: dict[int, int] = {}
         self._live_seqs: dict[int, int] = {}
+        self._sid_rid: dict[int, int] = {}
+
+    @property
+    def _lm(self) -> Optional[PagedLM]:
+        return self.model if isinstance(self.model, PagedLM) else None
 
     def _claim(self, rid: int, n_allocs: int) -> None:
         take = min(self._claims.get(rid, 0), n_allocs)
@@ -110,9 +156,16 @@ class ServeEngine:
             self.pool.unreserve(take)
             self._claims[rid] -= take
 
+    def _on_alloc(self, sid: int, n_allocs: int) -> None:
+        self._claim(self._sid_rid[sid], n_allocs)
+
     def _finish_seq(self, seq: SeqState) -> None:
         self.finished.setdefault(seq.rid, []).append(seq.out_tokens)
-        self.cache.release(seq.table, self.pool)
+        if self._lm is not None:
+            self._lm.backend.free_seq(seq.sid)
+            del self._sid_rid[seq.sid]
+        else:
+            self.cache.release(seq.table, self.pool)
         self._live_seqs[seq.rid] -= 1
         if self._live_seqs[seq.rid] == 0:
             del self._live_seqs[seq.rid]
@@ -129,6 +182,15 @@ class ServeEngine:
             + req.blocks_needed(self.pool.cfg.block_size)
         self._live_seqs[req.rid] = self._live_seqs.get(req.rid, 0) \
             + req.n_samples
+        if self._lm is not None:
+            seqs = self._prefill_lm(req, prompt)
+        else:
+            seqs = self._prefill_toy(req, prompt)
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += len(prompt)
+        return seqs
+
+    def _prefill_toy(self, req: Request, prompt: list) -> list[SeqState]:
         bids, n = self.cache.match(prompt, self.pool)
         table = BlockTable(bids, n)
         rest = prompt[n:]
@@ -136,7 +198,6 @@ class ServeEngine:
         table.extend(self.pool, rest, seq_tokens=prompt, cache=self.cache,
                      kv=self.model.kv_for(rest))
         self._claim(req.rid, self.pool.stats.allocs - allocs0)
-        self.stats.prefills += 1
         self.stats.shared_prompt_tokens += n
         seqs = [SeqState(req.rid, prompt, table, req.max_new)]
         for i in range(1, req.n_samples):  # forks share all blocks (CoW later)
@@ -144,11 +205,31 @@ class ServeEngine:
                                  req.max_new, salt=i))
         return seqs
 
+    def _prefill_lm(self, req: Request, prompt: list) -> list[SeqState]:
+        lm = self._lm
+        allocs0 = self.pool.stats.allocs
+        sid, logits, shared = lm.backend.new_seq(lm.params, prompt)
+        self._sid_rid[sid] = req.rid
+        self._claim(req.rid, self.pool.stats.allocs - allocs0)
+        self.stats.shared_prompt_tokens += shared
+        seqs = []
+        for i in range(req.n_samples):
+            s = sid if i == 0 else lm.backend.fork_seq(sid)
+            self._sid_rid[s] = req.rid
+            seqs.append(SeqState(req.rid, list(prompt), lm.backend.table(s),
+                                 req.max_new, salt=i, sid=s,
+                                 pending=lm.next_token(logits, i)))
+        return seqs
+
     # -- one engine step ------------------------------------------------------
 
     def step(self, now: float = 0.0) -> int:
         """Admit + prefill into free lanes, then decode one token on every
-        running lane.  Returns number of tokens generated this step."""
+        running lane.  Returns number of tokens generated this step.
+        A no-op (returns 0 untouched) when nothing runs and nothing is
+        queued."""
+        if not self.running and not len(self.scheduler):
+            return 0
         free = self.max_lanes - len(self.running)
         if free > 0:
             # a request occupies one decode lane per forked sample
@@ -163,17 +244,8 @@ class ServeEngine:
             self.pool.cfg.blocks_per_group)
         self.running = [self.running[i] for i in order]
 
-        pt, lengths = ops.pool_page_tables([s.table for s in self.running])
-        q = self.model.q_for([s.tokens[-1] for s in self.running])
-        # stage the host-mutated pool buffers to device once per step
-        kp, vp = jnp.asarray(self.pool.k_pages), jnp.asarray(self.pool.v_pages)
-        if self.use_kernel:
-            from repro.kernels.paged_attention.paged_attention import \
-                paged_attention
-            o = paged_attention(q, kp, vp, pt, lengths, interpret=True)
-        else:
-            o = paged_attention_ref(q, kp, vp, pt, lengths)
-        nxt = self.model.readout(o, [s.salt for s in self.running])
+        nxt = self._decode_lm() if self._lm is not None \
+            else self._decode_toy()
 
         still: list[SeqState] = []
         for seq, tok in zip(self.running, nxt):
@@ -185,17 +257,52 @@ class ServeEngine:
             if seq.done:
                 self._finish_seq(seq)
             else:
-                # append the token's KV for the next step (copy-on-write if
-                # the tail block is shared with a fork)
-                allocs0 = self.pool.stats.allocs
-                seq.table.extend(self.pool, [tok], seq_tokens=seq.tokens,
-                                 cache=self.cache,
-                                 kv=self.model.kv_for([tok]))
-                self._claim(seq.rid, self.pool.stats.allocs - allocs0)
+                if self._lm is None:
+                    # append the token's KV for the next step (copy-on-write
+                    # if the tail block is shared with a fork); the LM driver
+                    # writes KV inside backend.decode instead
+                    allocs0 = self.pool.stats.allocs
+                    seq.table.extend(self.pool, [tok], seq_tokens=seq.tokens,
+                                     cache=self.cache,
+                                     kv=self.model.kv_for([tok]))
+                    self._claim(seq.rid, self.pool.stats.allocs - allocs0)
                 still.append(seq)
         self.running = still
         self.stats.steps += 1
         return len(nxt)
+
+    def _decode_toy(self) -> list:
+        pt, lengths = ops.pool_page_tables([s.table for s in self.running])
+        q = self.model.q_for([s.tokens[-1] for s in self.running])
+        # stage the host-mutated pool buffers to device once per step
+        # (layer plane 0 — the toy model is single-layer)
+        kp = jnp.asarray(self.pool.k_pages[0])
+        vp = jnp.asarray(self.pool.v_pages[0])
+        if self.use_kernel:
+            from repro.kernels.paged_attention.paged_attention import \
+                paged_attention
+            o = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+        else:
+            o = paged_attention_ref(q, kp, vp, pt, lengths)
+        return list(self.model.readout(o, [s.salt for s in self.running]))
+
+    def _decode_lm(self) -> list:
+        """One ragged decode round: lanes holding a prefill-produced first
+        token emit it; the rest advance through the backend together."""
+        lm = self._lm
+        nxt: dict[int, int] = {}
+        live = [s for s in self.running if s.pending is None]
+        for s in self.running:
+            if s.pending is not None:
+                nxt[id(s)] = s.pending
+                s.pending = None
+        if live:
+            logits = lm.backend.decode(
+                lm.params, [s.sid for s in live],
+                [s.tokens[-1] for s in live], on_alloc=self._on_alloc)
+            for s, lg in zip(live, logits):
+                nxt[id(s)] = lm.next_token(lg, s.salt)
+        return [nxt[id(s)] for s in self.running]
 
     def run(self, requests, *, max_steps: int = 10_000) -> dict[int, list]:
         """Drive submit/step to completion (the offline serving loop)."""

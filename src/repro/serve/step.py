@@ -1,11 +1,13 @@
 """Serving steps: prefill (build cache) and decode (one token, batched).
 
 ``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
-token against a KV/SSM cache of ``seq_len``.
+token against a KV/SSM cache of ``seq_len``.  It operates on the concrete
+dense ``lm.Cache`` pytree so the dry-run can jit/shard it; everything
+above this file speaks the ``KVBackend`` API (``kvcache.backend``) —
+``greedy_generate`` works against any backend.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import lm
@@ -14,8 +16,9 @@ from repro.models.config import ModelConfig
 
 def make_decode_step(cfg: ModelConfig):
     def serve_step(params, cache: lm.Cache, tokens):
-        """tokens: (B, 1) -> (next_token (B,1), logits, cache)."""
-        logits, cache = lm.decode_step(params, cfg, tokens, cache)
+        """tokens: (B, 1) -> (next_token (B,1), logits, cache).  Pure over
+        the dense Cache pytree (jit/shard/donate friendly)."""
+        logits, cache = lm.dense_decode_step(params, cfg, tokens, cache)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache
     return serve_step
@@ -23,20 +26,25 @@ def make_decode_step(cfg: ModelConfig):
 
 def make_prefill(cfg: ModelConfig, max_seq: int):
     def prefill_step(params, tokens, frontend=None):
-        return lm.prefill(params, cfg, tokens, max_seq=max_seq,
-                          frontend_emb=frontend)
+        return lm.dense_prefill(params, cfg, tokens, max_seq=max_seq,
+                                frontend_emb=frontend)
     return prefill_step
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt, n_tokens: int,
-                    max_seq: int, frontend=None):
-    """Reference generation loop (used by examples + tests)."""
-    logits, cache = lm.prefill(params, cfg, prompt, max_seq=max_seq,
-                               frontend_emb=frontend)
+                    max_seq: int = 0, frontend=None, backend=None):
+    """Reference generation loop (used by examples + tests).
+
+    Runs through the ``KVBackend`` API: dense by default (``max_seq``),
+    or any backend passed in (e.g. a ``PagedBackend``) — the generated
+    tokens must not depend on which backend holds the KV.
+    """
+    logits, backend = lm.prefill(params, cfg, prompt, max_seq=max_seq,
+                                 frontend_emb=frontend, backend=backend)
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     out = [tok]
-    step = jax.jit(make_decode_step(cfg))
     for _ in range(n_tokens - 1):
-        tok, _, cache = step(params, cache, tok)
+        logits, backend = lm.decode_step(params, cfg, tok, backend)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -1,0 +1,146 @@
+"""Unified KV-backend API: dense-vs-paged decode parity, layer-axis
+placement, ragged continuous-batching decode, and the full-LM engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kvcache import row_group_of
+from repro.kvcache.backend import DenseBackend, PagedBackend, make_backend
+from repro.models import lm
+
+ARCHS = ["qwen1_5_0_5b", "starcoder2_7b", "phi3_medium_14b"]
+
+
+def _model(arch, seed=0):
+    cfg = configs.get_smoke(arch)
+    params = lm.init(cfg, jax.random.key(seed)).params
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# dense vs paged logit parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_dense_paged_decode_parity(arch):
+    """DenseBackend and PagedBackend must produce identical logits across
+    prefill + several greedy decode steps."""
+    cfg, params = _model(arch)
+    tokens = jax.random.randint(jax.random.key(1), (2, 9), 1, cfg.vocab)
+
+    dense = DenseBackend(cfg, batch=2, max_seq=24)
+    paged = PagedBackend(cfg, num_blocks=64, block_size=4)
+    lg_d, _ = lm.prefill(params, cfg, tokens, backend=dense)
+    lg_p, _ = lm.prefill(params, cfg, tokens, backend=paged)
+    np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                               np.asarray(lg_p, np.float32),
+                               rtol=1e-4, atol=1e-4)
+    tok = jnp.argmax(lg_d[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(5):
+        lg_d, _ = lm.decode_step(params, cfg, tok, dense)
+        lg_p, _ = lm.decode_step(params, cfg, tok, paged)
+        np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                                   np.asarray(lg_p, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+        a = np.argmax(np.asarray(lg_d[:, -1], np.float32), -1)
+        b = np.argmax(np.asarray(lg_p[:, -1], np.float32), -1)
+        assert (a == b).all()
+        tok = jnp.asarray(a, jnp.int32)[:, None]
+    assert (np.asarray(paged.lengths) == np.asarray(dense.lengths)).all()
+    paged.release()
+    paged.pool.check_invariants()
+    assert paged.pool.num_live == 0
+
+
+def test_make_backend_registry():
+    cfg, _ = _model(ARCHS[0])
+    assert isinstance(make_backend(cfg, "dense", batch=1, max_seq=8),
+                      DenseBackend)
+    assert isinstance(make_backend(cfg, "paged", num_blocks=16),
+                      PagedBackend)
+    # paged sizing honors the caller's capacity request: batch lanes of
+    # max_seq tokens (+1 decode slot), ceil-divided into blocks
+    be = make_backend(cfg, "paged", batch=2, max_seq=64)
+    assert be.pool.cfg.num_blocks == 2 * (-(-(64 + 1) // 16))
+    with pytest.raises(ValueError):
+        make_backend(cfg, "holographic")
+    # families whose decode state the pool cannot hold are refused, not
+    # silently mis-served
+    with pytest.raises(NotImplementedError):
+        make_backend(configs.get_smoke("mamba2_370m"), "paged")
+
+
+def test_dense_backend_exposes_concrete_cache_reads():
+    """Migration compatibility: .k/.v/.length forward to the pytree."""
+    cfg, params = _model(ARCHS[0])
+    be = lm.init_cache(cfg, batch=2, max_seq=16)
+    assert be.k.shape == (cfg.n_layers, 2, 16, cfg.n_kv_heads, cfg.d_head)
+    tokens = jax.random.randint(jax.random.key(2), (2, 4), 1, cfg.vocab)
+    _, be = lm.prefill(params, cfg, tokens, backend=be)
+    assert int(be.length) == 4
+
+
+# ---------------------------------------------------------------------------
+# layer-axis placement
+# ---------------------------------------------------------------------------
+
+def test_layer_axis_keeps_token_blocks_in_one_row_group():
+    """A token's per-layer KV blocks must land in one DRAM row group: the
+    pool's layer axis makes one block id (= one placement decision) cover
+    every layer, and MARS placement packs a sequence's blocks into few
+    groups."""
+    cfg, params = _model(ARCHS[0])
+    backend = PagedBackend(cfg, num_blocks=64, block_size=4)
+    pool = backend.pool
+    prompt = list(range(1, 19))
+    sid, _, _ = backend.new_seq(params, prompt)
+    for _ in range(3):
+        backend.decode(params, [sid], [5])
+    table = backend.table(sid)
+    bpg = pool.cfg.blocks_per_group
+    for t in range(table.num_tokens):
+        groups = {row_group_of(backend.block_of(sid, layer, t), bpg)
+                  for layer in range(cfg.n_layers)}
+        assert len(groups) == 1, \
+            f"token {t} scattered across row groups {groups}"
+    # MARS placement on a fresh pool: the whole sequence packs into the
+    # minimum number of row neighborhoods
+    seq_groups = {row_group_of(b, bpg) for b in table.blocks}
+    assert len(seq_groups) == -(-len(table.blocks) // bpg)
+    # and the pool buffer really is layered: one plane per model layer
+    assert pool.k_pages.shape[0] == cfg.n_layers
+
+
+def test_paged_ragged_decode_matches_isolated():
+    """Lanes at different lengths decoding in one batched call must see
+    exactly the logits they would get decoding alone."""
+    cfg, params = _model(ARCHS[1])
+    together = PagedBackend(cfg, num_blocks=64, block_size=4,
+                            share_prefixes=False)
+    a, la, _ = together.new_seq(params, list(range(1, 14)))   # 13 tokens
+    b, lb, _ = together.new_seq(params, list(range(20, 25)))  # 5 tokens
+    lg = together.decode(params, [a, b], [7, 9])
+    for prompt, nxt, want0 in ((list(range(1, 14)), 7, la),
+                               (list(range(20, 25)), 9, lb)):
+        alone = PagedBackend(cfg, num_blocks=64, block_size=4,
+                             share_prefixes=False)
+        s, l0, _ = alone.new_seq(params, prompt)
+        np.testing.assert_allclose(l0, want0, rtol=1e-4, atol=1e-4)
+        lg1 = alone.decode(params, [s], [nxt])
+        idx = 0 if nxt == 7 else 1
+        np.testing.assert_allclose(lg[idx], lg1[0], rtol=1e-4, atol=1e-4)
+
+
+def test_paged_prefix_sharing_shares_storage():
+    cfg, params = _model(ARCHS[0])
+    backend = PagedBackend(cfg, num_blocks=64, block_size=4)
+    prompt = list(range(1, 18))
+    s1, l1, n1 = backend.new_seq(params, prompt)
+    s2, l2, n2 = backend.new_seq(params, prompt)
+    assert n1 == 0 and n2 == 16          # 4 full blocks matched
+    assert backend.table(s1).blocks[:4] == backend.table(s2).blocks[:4]
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+    backend.release()
+    assert backend.pool.num_live == 0

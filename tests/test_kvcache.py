@@ -245,3 +245,20 @@ def test_soak_invariants():
     pool.alloc(pool.cfg.num_blocks)
     assert pool.num_cached == 0 and len(cache) == 0
     pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# eviction under skewed prefix popularity (benchmarks/kvcache_bench)
+# ---------------------------------------------------------------------------
+
+def test_lru_beats_fifo_under_zipf_skew():
+    """Hot prefixes are old prefixes: FIFO evicts them by arrival, LRU
+    keeps them resident — the hit-rate gap is the point of the bench."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.kvcache_bench import eviction_comparison
+
+    rates = eviction_comparison(zipf_a=1.3, n_requests=200, seed=0)
+    assert 0.0 < rates["fifo"] <= 1.0 and 0.0 < rates["lru"] <= 1.0
+    assert rates["lru"] >= rates["fifo"], rates
