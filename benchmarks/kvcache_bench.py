@@ -13,6 +13,14 @@ Emits ``kvcache/<placement>/...`` rows plus the headline uplift, and the
 same traces after a bounded-window ``reorder.mars_order`` pass (the MC-side
 MARS reorder buffer) to show placement and reordering compose.
 
+Decode-path section (``kvcache/decode/...``): the same fragmented pool
+read two ways — the gather path's round-robin lane interleave
+(``ops.kv_read_trace``) vs the Pallas kernel's sequence-major page walk
+(``ops.kv_read_trace_kernel``) — through ``core.dram.simulate``, reporting
+bandwidth and row-buffer hit rate.  The kernel path never interleaves
+lanes, so its hit rate bounds the gather path's from above; this is the
+bandwidth MARS placement actually delivers to the attention kernel.
+
 Eviction section (ROADMAP "online eviction tuning"): a skewed-prefix
 workload — request popularity Zipf-distributed over prompt prefixes —
 drives the prefix cache under memory pressure and reports the FIFO
@@ -93,6 +101,32 @@ def mean_uplift(n_live: int, seeds=(0, 1, 2), **kw) -> tuple[float, dict]:
     return float(np.mean(ups)), last
 
 
+def row_hit_rate(res) -> float:
+    """Row-buffer hit rate of a ``DramResult``: CAS that did not activate."""
+    return 1.0 - res.n_act / max(res.n_requests, 1)
+
+
+def decode_path_comparison(*, placement: str = "mars", n_live: int = 16,
+                           grant_beats: int = 4, seed: int = 0) -> dict:
+    """{path: DramResult} for one decode step over the same churned pool.
+
+    ``gather``  the dense-view path: every lane's pages gathered in
+                parallel, so the memory system sees the round-robin
+                interleave of the per-lane streams.
+    ``kernel``  the Pallas ``paged_attention`` path: the grid walks lanes
+                one after another, each lane's pages in page-table order,
+                page-contiguously — MARS placement finally reaches the
+                attention kernel's address stream unflattened.
+    """
+    pool, tables = churned_pool(placement, n_live=n_live,
+                                churn_events=600, seed=seed)
+    return {
+        "gather": dram.simulate(
+            ops.kv_read_trace(tables, grant_beats=grant_beats)),
+        "kernel": dram.simulate(ops.kv_read_trace_kernel(tables)),
+    }
+
+
 def zipf_requests(n_requests: int, n_prefixes: int, zipf_a: float,
                   prefix_tokens: int, seed: int = 0):
     """Skewed-prefix workload: request i reuses prefix p with
@@ -165,6 +199,18 @@ def run(emit, smoke: bool = False) -> None:
         uplift = res["mars"].achieved_gbps / res["naive"].achieved_gbps - 1
         emit("kvcache/placement+reorder/uplift", us / 2,
              f"{100 * uplift:.2f}%")
+    # decode-path bandwidth: gather-path interleave vs the kernel's
+    # sequence-major page walk, same MARS-placed pool — the first
+    # end-to-end measurement of placement reaching the attention kernel
+    for placement in ("naive", "mars"):
+        t0 = time.perf_counter()
+        res = decode_path_comparison(placement=placement)
+        us = (time.perf_counter() - t0) * 1e6
+        for path, r in res.items():
+            emit(f"kvcache/decode/{path}/{placement}", us / 2,
+                 f"{r.achieved_gbps:.2f}GB/s")
+            emit(f"kvcache/decode/{path}/{placement}/rowhit", us / 2,
+                 f"{100 * row_hit_rate(r):.2f}%")
     # FIFO vs LRU under skewed prefix popularity
     n_requests = 150 if smoke else 400
     for zipf_a in (0.8, 1.3):

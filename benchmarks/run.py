@@ -4,19 +4,54 @@ Prints ``name,us_per_call,derived`` CSV.  One section per paper
 table/figure plus the TPU-adaptation kernel benchmarks.
 
 ``--smoke`` runs a reduced pass of the sections that support it (the
-placement/eviction benches) and skips the rest — cheap enough for CI, so
-the benches cannot silently rot.
+placement/eviction/decode-path benches) and skips the rest — cheap enough
+for CI, so the benches cannot silently rot.
+
+CI regression gate: the placement/decode bandwidth numbers come from the
+seeded churn workload through the deterministic DRAM model, so they are
+bit-stable across machines.  ``--update-baseline`` snapshots them into
+``results/bench_baseline.json``; ``--baseline <path>`` compares the
+current run against a snapshot and exits non-zero on a >10% regression
+(wall-clock ``us_per_call`` is never compared — only simulated
+bandwidth/hit-rate values).  ``--json <path>`` dumps every emitted row
+for artifact upload.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
+import os
+import re
 import sys
 
+# keys gated against the baseline: deterministic DRAM-simulation outputs
+_GATED = re.compile(r"^kvcache/(placement|decode)/")
+_BASELINE_DEFAULT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "bench_baseline.json")
+_REGRESSION_TOLERANCE = 0.10
 
-def _emit(name: str, us: float, derived: str = "") -> None:
-    print(f"{name},{us:.1f},{derived}")
-    sys.stdout.flush()
+
+def _parse_value(derived: str):
+    """Leading float of a derived string ("3.21GB/s", "42.5%hit")."""
+    m = re.match(r"^-?\d+(\.\d+)?", derived)
+    return float(m.group(0)) if m else None
+
+
+def check_baseline(rows, baseline: dict) -> list[str]:
+    """Regressions (>10% below baseline) among the gated keys."""
+    current = {r["name"]: _parse_value(r["derived"]) for r in rows}
+    failures = []
+    for key, want in baseline.items():
+        got = current.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from current run "
+                            f"(baseline {want})")
+        elif want > 0 and got < want * (1 - _REGRESSION_TOLERANCE):
+            failures.append(f"{key}: {got} vs baseline {want} "
+                            f"({100 * (got / want - 1):+.1f}%)")
+    return failures
 
 
 def main() -> None:
@@ -26,7 +61,27 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced CI pass; sections without smoke support "
                          "are skipped")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the emitted rows as JSON (CI artifact)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare placement/decode bandwidth rows against "
+                         "a checked-in baseline; fail on >10% regression")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help=f"refresh {_BASELINE_DEFAULT} from this run "
+                         "(forces --smoke: the baseline gates the CI "
+                         "smoke pass, so it must be built from the same "
+                         "row set and seeds)")
     args = ap.parse_args()
+    if args.update_baseline:
+        args.smoke = True
+
+    rows: list[dict] = []
+
+    def _emit(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
 
     sections = []
     from benchmarks import paper_figures
@@ -57,6 +112,34 @@ def main() -> None:
                 fn(_emit, smoke=True)
             continue
         fn(_emit)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": rows}, f, indent=2)
+        print(f"[bench] wrote {len(rows)} rows to {args.json}",
+              file=sys.stderr)
+
+    if args.update_baseline:
+        snap = {r["name"]: _parse_value(r["derived"]) for r in rows
+                if _GATED.match(r["name"])
+                and _parse_value(r["derived"]) is not None}
+        assert snap, "no gated rows emitted (did --only filter out kvcache?)"
+        with open(_BASELINE_DEFAULT, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[bench] baseline refreshed: {len(snap)} keys -> "
+              f"{_BASELINE_DEFAULT}", file=sys.stderr)
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        failures = check_baseline(rows, baseline)
+        for msg in failures:
+            print(f"[bench] REGRESSION {msg}", file=sys.stderr)
+        if failures:
+            sys.exit(1)
+        print(f"[bench] baseline check passed ({len(baseline)} keys)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,11 @@ def mars_order(page_ids: jnp.ndarray, *, num_pages: int | None = None,
     """
     page_ids = jnp.asarray(page_ids)
     n = page_ids.shape[0]
+    if n == 0:
+        # empty stream (e.g. a zero-sequence decode batch from an idle
+        # engine step): the identity permutation, not an associative_scan
+        # over zero segments — mirrors the mars_reorder empty-input fix
+        return jnp.zeros(0, jnp.int32)
     if window is not None and window < n:
         pad = (-n) % window
         padded = jnp.concatenate(

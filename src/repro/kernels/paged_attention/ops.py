@@ -1,17 +1,27 @@
 """Pool -> kernel bridge: block tables as paged-attention operands, and the
 kernel's memory-access stream as a DRAM-model trace.
 
-Three views of the same object:
+Views of the same object:
 
-  ``pool_page_tables``   pad per-sequence ``BlockTable``s into the dense
-                         ``(B, n_pages)`` int32 operand the Pallas kernel
-                         scalar-prefetches
-  ``batch_lane_order``   order decode lanes so sequences whose tail blocks
-                         share a DRAM row neighborhood sit adjacent — the
-                         ``reorder.mars_order`` policy applied to the batch
-  ``kv_read_trace``      the 64B-line address stream the paged gather emits
-                         toward memory (per-lane streams interleaved by the
-                         parallel gather), consumable by ``core.dram.simulate``
+  ``pool_page_tables``     pad per-sequence ``BlockTable``s into the dense
+                           ``(B, n_pages)`` int32 operand the Pallas kernel
+                           scalar-prefetches (optionally lane-padded for
+                           recompile-free batching)
+  ``batch_lane_order``     order decode lanes so sequences whose tail blocks
+                           share a DRAM row neighborhood sit adjacent — the
+                           ``reorder.mars_order`` policy applied to the batch
+  ``kv_read_trace``        the 64B-line address stream the paged *gather*
+                           emits toward memory (per-lane streams interleaved
+                           by the parallel gather), consumable by
+                           ``core.dram.simulate``
+  ``kv_read_trace_kernel`` the same step's reads as the Pallas kernel's
+                           grid issues them: sequence-major, each lane's
+                           pages visited in page-table order,
+                           page-contiguously — the PhyPageList walk
+
+All trace builders accept empty inputs (no tables, or tables with no
+blocks — e.g. a zero-sequence batch from an idle engine step) and return
+an empty int32 stream that ``dram.simulate`` serves as zero requests.
 """
 from __future__ import annotations
 
@@ -25,12 +35,15 @@ from repro.kvcache.placement import row_group_of
 from repro.kvcache.pool import LINES_PER_BLOCK
 
 
-def pool_page_tables(tables: Sequence, pad_to: int | None = None):
+def pool_page_tables(tables: Sequence, pad_to: int | None = None,
+                     pad_lanes: int | None = None):
     """(page_tables int32 (B, n_pages), lengths int32 (B,)).  Padding block
-    id 0 is safe: the kernel masks positions >= length."""
+    id 0 is safe: the kernel masks positions >= length.  ``pad_to`` pads
+    the page axis, ``pad_lanes`` the batch axis (padded lanes have
+    length 0, which the kernel skips entirely)."""
     n_pages = max((len(t.blocks) for t in tables), default=1)
     n_pages = max(n_pages, pad_to or 1)
-    B = len(tables)
+    B = max(len(tables), pad_lanes or 0)
     pt = np.zeros((B, n_pages), np.int32)
     lengths = np.zeros(B, np.int32)
     for i, t in enumerate(tables):
@@ -59,14 +72,28 @@ def kv_read_trace(tables: Sequence, *, grant_beats: int = 4,
     the round-robin interleave of the per-lane streams — the same
     multi-stream merge that destroys locality at the paper's GPU boundary.
     """
-    lanes = []
-    for t in tables:
-        if not t.blocks:
-            continue
-        base = np.asarray(t.blocks, np.int64)[:, None] * lines_per_block
-        lanes.append((base + np.arange(lines_per_block)).reshape(-1)
-                     .astype(np.int32))
+    lanes = [_lane_lines(t, lines_per_block) for t in tables if t.blocks]
     if not lanes:
         return np.zeros(0, np.int32)
     addr, _ = _round_robin_merge(lanes, grant_beats)
     return addr
+
+
+def kv_read_trace_kernel(tables: Sequence, *,
+                         lines_per_block: int = LINES_PER_BLOCK
+                         ) -> np.ndarray:
+    """64B-line addresses of one decode step's KV reads as the Pallas
+    ``paged_attention`` grid issues them: lanes served one after another
+    (grid axis 0), each lane's pages in page-table order (grid axis 1),
+    lines within a page contiguous.  No cross-lane interleave ever reaches
+    the memory system — the kernel-path rendering of the MARS reorder.
+    """
+    chunks = [_lane_lines(t, lines_per_block) for t in tables if t.blocks]
+    if not chunks:
+        return np.zeros(0, np.int32)
+    return np.concatenate(chunks)
+
+
+def _lane_lines(table, lines_per_block: int) -> np.ndarray:
+    base = np.asarray(table.blocks, np.int64)[:, None] * lines_per_block
+    return (base + np.arange(lines_per_block)).reshape(-1).astype(np.int32)

@@ -8,6 +8,18 @@ BlockSpec index maps — exactly the PhyPageList head/tail walk.
 
 Grid: (B, pages_per_seq) with online-softmax state in VMEM scratch across
 the page loop; one query token per sequence (decode).
+
+The kernel understands the block pool's leading **layer axis**: pass
+``k_pages``/``v_pages`` of shape (L, P, page, Hkv, D) plus ``layer`` and
+the index map reads plane ``layer`` of the pool directly — one block-table
+lookup serves every layer of a row group, and no per-layer plane is ever
+materialized.  4-D pages (single-layer pools, the PR-1 engine) keep
+working unchanged.
+
+``decode_attend`` is the full decode-step attention: kernel over the
+cached pages + one online-softmax merge step folding in the in-flight
+token's K/V (which is not in the pool yet — the backend writes it back
+*after* the step, so the kernel never reads a partially-written page).
 """
 from __future__ import annotations
 
@@ -22,7 +34,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+def _kernel(pt_ref, len_ref, layer_ref, q_ref, k_ref, v_ref,
+            o_ref, m_out_ref, l_out_ref,
             m_ref, l_ref, acc_ref, *, page: int, n_pages: int,
             n_rep: int, scale: float):
     b = pl.program_id(0)
@@ -40,8 +53,8 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(base < ln)
     def _body():
         q = q_ref[0]                                  # (H, D)
-        k = k_ref[0]                                  # (page, Hkv, D)
-        v = v_ref[0]
+        k = k_ref[0, 0]                               # (page, Hkv, D)
+        v = v_ref[0, 0]
         Hkv = k.shape[1]
         H = q.shape[0]
         # GQA: fold query heads onto kv heads: (Hkv, n_rep, D)
@@ -66,39 +79,98 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     def _store():
         o_ref[0] = (acc_ref[...]
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        m_out_ref[0] = m_ref[...]
+        l_out_ref[0] = l_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "return_state"))
 def paged_attention(q, k_pages, v_pages, page_tables, lengths, *,
-                    interpret: bool = False):
-    """q: (B, H, D); k/v_pages: (P, page, Hkv, D); page_tables: (B, n_pages);
-    lengths: (B,).  Returns (B, H, D)."""
+                    layer=None, interpret: bool = False,
+                    return_state: bool = False):
+    """q: (B, H, D); k/v_pages: (P, page, Hkv, D) or, for a layered block
+    pool, (L, P, page, Hkv, D) with ``layer`` selecting the plane;
+    page_tables: (B, n_pages); lengths: (B,).
+
+    Returns (B, H, D), or with ``return_state`` the online-softmax state
+    ``(o, m, l)`` (m/l: (B, H, 1) float32) so a caller can merge more
+    keys — e.g. the decode step's in-flight token — without renormalizing.
+    """
     B, H, D = q.shape
-    P, page, Hkv, _ = k_pages.shape
+    if k_pages.ndim == 4:            # single-layer pool: lift to one plane
+        assert layer is None or layer == 0
+        k_pages = k_pages[None]
+        v_pages = v_pages[None]
+        layer = 0
+    assert layer is not None, "layered k_pages needs a layer index"
+    L, P, page, Hkv, _ = k_pages.shape
     n_pages = page_tables.shape[1]
     n_rep = H // Hkv
     scale = 1.0 / np.sqrt(D)
+    layer_arr = jnp.atleast_1d(jnp.asarray(layer, jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, n_pages),
         in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, j, pt, ln: (b, 0, 0)),
-            # MARS page walk: the page table drives the block index
-            pl.BlockSpec((1, page, Hkv, D),
-                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
-            pl.BlockSpec((1, page, Hkv, D),
-                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, H, D), lambda b, j, pt, ln, la: (b, 0, 0)),
+            # MARS page walk: the page table drives the block index; the
+            # layer plane comes straight from the layered pool buffer
+            pl.BlockSpec((1, 1, page, Hkv, D),
+                         lambda b, j, pt, ln, la: (la[0], pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, Hkv, D),
+                         lambda b, j, pt, ln, la: (la[0], pt[b, j], 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, D), lambda b, j, pt, ln: (b, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, pt, ln, la: (b, 0, 0)),
+            pl.BlockSpec((1, H, 1), lambda b, j, pt, ln, la: (b, 0, 0)),
+            pl.BlockSpec((1, H, 1), lambda b, j, pt, ln, la: (b, 0, 0)),
+        ],
         scratch_shapes=[pltpu.VMEM((H, 1), jnp.float32),
                         pltpu.VMEM((H, 1), jnp.float32),
                         pltpu.VMEM((H, D), jnp.float32)],
     )
-    return pl.pallas_call(
+    o, m, l = pl.pallas_call(
         functools.partial(_kernel, page=page, n_pages=n_pages,
                           n_rep=n_rep, scale=scale),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        out_shape=[jax.ShapeDtypeStruct((B, H, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, H, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, 1), jnp.float32)],
         interpret=interpret,
-    )(page_tables, lengths, q, k_pages, v_pages)
+    )(page_tables, lengths, layer_arr, q, k_pages, v_pages)
+    return (o, m, l) if return_state else o
+
+
+def decode_attend(q, k_new, v_new, k_pages, v_pages, page_tables,
+                  lengths, *, layer=0, interpret: bool = False):
+    """Decode-step attention: the paged kernel over the cached pages plus
+    one online-softmax merge step for the in-flight token (position
+    ``lengths[b]``, always attended — it is its own causal context).
+
+    q: (B, H, D); k_new/v_new: (B, Hkv, D) — the in-flight token's K/V,
+    not yet written to the pool.  Returns (B, H, D).
+
+    A lane with ``lengths[b] == 0`` degenerates cleanly: the kernel state
+    is (m=-inf, l=0) and the merge reduces to attending the token alone.
+    """
+    B, H, D = q.shape
+    Hkv = k_new.shape[1]
+    n_rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+    o, m, l = paged_attention(q, k_pages, v_pages, page_tables, lengths,
+                              layer=layer, interpret=interpret,
+                              return_state=True)
+    # score of the in-flight token, same GQA head layout as the kernel
+    qg = q.reshape(B, Hkv, n_rep, D)
+    s_new = jnp.einsum("bhrd,bhd->bhr", qg.astype(jnp.float32),
+                       k_new.astype(jnp.float32)) * scale
+    s_new = s_new.reshape(B, H, 1)
+    m2 = jnp.maximum(m, s_new)
+    alpha = jnp.exp(m - m2)
+    p = jnp.exp(s_new - m2)
+    l2 = l * alpha + p
+    v_rep = jnp.repeat(v_new, n_rep, axis=1).astype(jnp.float32)  # (B,H,D)
+    o2 = (o.astype(jnp.float32) * (l * alpha) + p * v_rep) \
+        / jnp.maximum(l2, 1e-30)
+    return o2.astype(q.dtype)

@@ -3,6 +3,12 @@
 Cache layout: KV lives in fixed-size pages; each sequence owns a list of
 page ids (its "page table").  One decode step attends one query token per
 sequence over its first ``length`` cached positions.
+
+``paged_attention_ref`` mirrors the kernel (cached positions only);
+``paged_decode_ref`` is the full decode-step oracle: cached positions
+*plus* the in-flight token's K/V, computed with one plain softmax over the
+concatenated keys — what ``paged_attention.decode_attend`` must match.
+Both accept 4-D pages or a layered 5-D pool buffer with ``layer``.
 """
 from __future__ import annotations
 
@@ -11,12 +17,21 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths):
-    """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D);
-    page_tables: int32 (B, pages_per_seq); lengths: int32 (B,).
+def _layer_plane(k_pages, v_pages, layer):
+    if k_pages.ndim == 5:
+        return k_pages[layer], v_pages[layer]
+    return k_pages, v_pages
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths,
+                        layer=0):
+    """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D) or layered
+    (L, P, page, Hkv, D); page_tables: int32 (B, pages_per_seq);
+    lengths: int32 (B,).
 
     Returns (B, H, D).  GQA via H % Hkv == 0 head repetition."""
     B, H, D = q.shape
+    k_pages, v_pages = _layer_plane(k_pages, v_pages, layer)
     P, page, Hkv, _ = k_pages.shape
     n_rep = H // Hkv
     scale = 1.0 / np.sqrt(D)
@@ -33,3 +48,37 @@ def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths):
         return jnp.einsum("hk,khd->hd", w.astype(qb.dtype), v)
 
     return jax.vmap(one)(q, page_tables, lengths)
+
+
+def paged_decode_ref(q, k_new, v_new, k_pages, v_pages, page_tables,
+                     lengths, layer=0):
+    """Decode-step oracle: attend the cached pages AND the in-flight
+    token (k_new/v_new: (B, Hkv, D)) with one flat softmax.
+
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    k_pages, v_pages = _layer_plane(k_pages, v_pages, layer)
+    P, page, Hkv, _ = k_pages.shape
+    n_rep = H // Hkv
+    scale = 1.0 / np.sqrt(D)
+
+    def one(qb, kn, vn, pt, ln):
+        k = jnp.concatenate(
+            [k_pages[pt].reshape(-1, Hkv, D), kn[None]], axis=0)
+        v = jnp.concatenate(
+            [v_pages[pt].reshape(-1, Hkv, D), vn[None]], axis=0)
+        k = jnp.repeat(k, n_rep, axis=1)
+        v = jnp.repeat(v, n_rep, axis=1)
+        s = jnp.einsum("hd,khd->hk",
+                       qb.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        S = k.shape[0]
+        # cached positions < ln are valid; the final slot is the in-flight
+        # token itself (its own causal context) — always attended
+        mask = (jnp.arange(S) < ln) | (jnp.arange(S) == S - 1)
+        s = jnp.where(mask[None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("hk,khd->hd", w,
+                          v.astype(jnp.float32)).astype(qb.dtype)
+
+    return jax.vmap(one)(q, k_new, v_new, page_tables, lengths)

@@ -15,12 +15,23 @@ K/V, ``decode_step`` advances every lane one token.  Two implementations:
                  ragged continuous-batching decode, prefix sharing and
                  copy-on-write forks, and is what ``serve.engine`` drives.
 
-Decode through the paged backend gathers each lane's pages into a dense
-per-layer view and runs the *same* ``lm.dense_decode_step`` math as the
-dense backend (per-sequence write positions), so dense and paged logits
-agree for every attention family; the new token's K/V is extracted from
-the step and written back into the pool host-side (the pool mutates in
-place, exactly like the single-layer engine of PR 1).
+Decode through the paged backend has two modes (``decode_mode``):
+
+  "kernel"   the default: ``lm.paged_decode_step`` reads each layer's KV
+             straight from the pool's layered page buffers via the Pallas
+             ``paged_attention`` kernel (online-softmax merge of the
+             in-flight token) — the MARS placement decisions *are* the
+             kernel's page-walk addresses, nothing is flattened first.
+  "gather"   the fallback/oracle: gather each lane's pages into a dense
+             per-layer view and run the *same* ``lm.dense_decode_step``
+             math as the dense backend, so gather-path logits agree with
+             the dense backend bit-for-bit.  Sliding-window configs fall
+             back here automatically (the kernel has no window mask yet).
+
+Either way the new token's K/V is extracted from the step and written
+back into the pool host-side after attention (the pool mutates in place,
+exactly like the single-layer engine of PR 1), so the kernel never reads
+a partially-written page.
 
 Adding a backend: implement ``prefill``/``decode_step``/``lengths``/
 ``release`` against ``lm.prefill_parts`` (storage-agnostic prompt run)
@@ -154,6 +165,17 @@ def _paged_decode(params, cfg, tokens, k_pages, v_pages, page_tables,
     return logits, k_new, v_new
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def _paged_decode_kernel(params, cfg, tokens, k_pages, v_pages,
+                         page_tables, lengths, interpret=True):
+    """Kernel-path decode: per-layer Pallas paged attention straight over
+    the pool's layered page buffers (no dense gather).  Same operand and
+    result shapes as ``_paged_decode``."""
+    from repro.models import lm
+    return lm.paged_decode_step(params, cfg, tokens, k_pages, v_pages,
+                                page_tables, lengths, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _jit_prefill_parts(params, cfg, tokens):
     from repro.models import lm
@@ -189,12 +211,21 @@ class PagedBackend:
     def __init__(self, cfg: ModelConfig, pool: Optional[BlockPool] = None,
                  *, num_blocks: int = 256, block_size: int = 16,
                  placement: str = "mars", eviction: str = "fifo",
-                 share_prefixes: bool = True):
+                 share_prefixes: bool = True, decode_mode: str = "kernel",
+                 kernel_interpret: bool = True):
         if not cfg.has_attention or cfg.has_ssm or cfg.enc_layers \
                 or cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
                 f"PagedBackend pages attention KV only; family "
                 f"{cfg.family!r} needs state the pool does not hold yet")
+        if decode_mode not in ("kernel", "gather"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if cfg.sliding_window:
+            # the Pallas kernel has no sliding-window mask yet; the dense
+            # gather path applies the window exactly like DenseBackend
+            decode_mode = "gather"
+        self.decode_mode = decode_mode
+        self.kernel_interpret = kernel_interpret
         self.cfg = cfg
         if pool is None:
             pool = BlockPool(PoolConfig(
@@ -272,25 +303,31 @@ class PagedBackend:
         """One ragged decode step: feed ``tokens[i]`` to sequence
         ``sids[i]``, cache its K/V, return next-token logits (n, V)."""
         assert sids, "no active sequences to decode (prefill first)"
+        from repro.kernels.paged_attention import ops
         seqs = [self._seqs[s] for s in sids]
         B = len(seqs)
         page = self.pool.cfg.block_size
         # padded page-table view: every lane needs room for slot len(seq)
+        # on the gather path (the kernel path attends the in-flight token
+        # out of registers, but shares the padding so both compile alike)
         n_pages = _pow2(max(
             -(-(len(s.tokens) + 1) // page) for s in seqs))
         Bp = _pow2(B)                       # lane padding bounds recompiles
-        pt = np.zeros((Bp, n_pages), np.int32)
-        lengths = np.zeros(Bp, np.int32)
-        for i, s in enumerate(seqs):
-            pt[i, :len(s.table.blocks)] = s.table.blocks
-            lengths[i] = s.table.num_tokens
+        pt, lengths = ops.pool_page_tables(
+            [s.table for s in seqs], pad_to=n_pages, pad_lanes=Bp)
         toks = np.zeros((Bp, 1), np.int32)
         toks[:B, 0] = list(tokens)
         kp = jnp.asarray(self.pool.k_pages)
         vp = jnp.asarray(self.pool.v_pages)
-        logits, k_new, v_new = _paged_decode(
-            params, self.cfg, jnp.asarray(toks), kp, vp,
-            jnp.asarray(pt), jnp.asarray(lengths))
+        if self.decode_mode == "kernel":
+            logits, k_new, v_new = _paged_decode_kernel(
+                params, self.cfg, jnp.asarray(toks), kp, vp,
+                jnp.asarray(pt), jnp.asarray(lengths),
+                interpret=self.kernel_interpret)
+        else:
+            logits, k_new, v_new = _paged_decode(
+                params, self.cfg, jnp.asarray(toks), kp, vp,
+                jnp.asarray(pt), jnp.asarray(lengths))
         k_new = np.asarray(k_new)           # (L, Bp, 1, K, dh)
         v_new = np.asarray(v_new)
         for i, (s, tok) in enumerate(zip(seqs, tokens)):

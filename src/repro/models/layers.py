@@ -280,6 +280,34 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions, mask,
     return out, new_kv
 
 
+def paged_attention_apply(p, x, cfg: ModelConfig, *, lengths, k_pages,
+                          v_pages, page_tables, layer,
+                          interpret: bool = True):
+    """Decode attention reading cached KV straight from the block pool via
+    the Pallas ``paged_attention`` kernel (kernel over the cached pages +
+    online-softmax merge of the in-flight token).
+
+    x: (B, 1, d); k_pages/v_pages: the pool's layered (L, P, page, K, dh)
+    buffers; ``layer`` selects the plane — one page table serves every
+    layer.  Returns (out (B, 1, d), (k_new, v_new) each (B, 1, K, dh),
+    post-RoPE, for pool write-back after the step).
+    """
+    from repro.kernels.paged_attention.paged_attention import decode_attend
+    cd = cfg.cdtype
+    positions = lengths[:, None]
+    q, k, v = _qkv(p, x, cfg, positions)
+    # round-trip through the cache dtype so the in-flight token sees the
+    # same quantization the dense backend applies on cache write/read
+    kc = k.astype(cfg.kvdtype).astype(cd)
+    vc = v.astype(cfg.kvdtype).astype(cd)
+    o = decode_attend(q[:, 0], kc[:, 0], vc[:, 0], k_pages, v_pages,
+                      page_tables, lengths, layer=layer,
+                      interpret=interpret)
+    out = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(cd),
+                     p["wo"].astype(cd))
+    return out, (k, v)
+
+
 def cross_kv(p, enc_out, cfg: ModelConfig):
     """Precompute cross-attention K/V from encoder output."""
     cd = cfg.cdtype

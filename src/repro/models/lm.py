@@ -2,9 +2,12 @@
 
 One parameter tree, one scan-over-layers forward, three entry points:
 
-  ``forward``      — teacher-forced training/prefill logits
-  ``prefill``      — build the serving cache from a prompt
-  ``decode_step``  — one-token serve step against the cache
+  ``forward``            — teacher-forced training/prefill logits
+  ``prefill``            — build the serving cache from a prompt
+  ``decode_step``        — one-token serve step against the cache
+  ``paged_decode_step``  — one-token serve step reading KV straight from
+                           the block pool via the Pallas paged-attention
+                           kernel (the PagedBackend's kernel decode path)
 
 Families: dense / moe (leading-dense + shared experts + dense residual) /
 ssm (mamba2) / hybrid (parallel attention+SSM heads, hymba-style) /
@@ -105,13 +108,24 @@ def _is_global_layer(cfg: ModelConfig, li):
 
 def _block_apply(bp, x, cfg: ModelConfig, *, masks, positions,
                  kv=None, cache_pos=None, ssm_state=None, xkv=None,
-                 is_global=None):
-    """One transformer block.  Returns (x, new_kv, new_ssm_state, aux)."""
+                 is_global=None, paged=None):
+    """One transformer block.  Returns (x, new_kv, new_ssm_state, aux).
+
+    ``paged`` routes decode attention through the Pallas paged-attention
+    kernel (KV read straight from the pool's layered page buffers) instead
+    of a dense cache view; everything around attention is unchanged."""
     aux = {}
     new_kv = None
     new_ssm = None
     attn_out = None
-    if cfg.has_attention:
+    if cfg.has_attention and paged is not None:
+        h = layers.apply_norm(bp["ln1"], x, cfg)
+        attn_out, new_kv = layers.paged_attention_apply(
+            bp["attn"], h, cfg, lengths=paged["lengths"],
+            k_pages=paged["k_pages"], v_pages=paged["v_pages"],
+            page_tables=paged["page_tables"], layer=paged["layer"],
+            interpret=paged["interpret"])
+    elif cfg.has_attention:
         mask = masks[0]
         if cfg.sliding_window and is_global is not None:
             mask = jnp.where(is_global, masks[1], masks[0])
@@ -159,8 +173,13 @@ def _zero_aux():
 
 def _scan_blocks(stacked, x, cfg: ModelConfig, *, masks, positions,
                  layer_offset: int, n: int, kv=None, cache_pos=None,
-                 ssm_states=None, xkv=None, remat: bool = False):
-    """lax.scan over stacked block params (+ optional caches)."""
+                 ssm_states=None, xkv=None, remat: bool = False,
+                 paged=None):
+    """lax.scan over stacked block params (+ optional caches).
+
+    ``paged``: kernel-path decode operands (pool page buffers + table +
+    lengths); the absolute layer index rides the scan so every iteration
+    reads its own plane of the layered pool through one shared table."""
     li = jnp.arange(layer_offset, layer_offset + n)
     glob = None
     if cfg.sliding_window:
@@ -170,11 +189,12 @@ def _scan_blocks(stacked, x, cfg: ModelConfig, *, masks, positions,
     def body(carry, inp):
         xx, aux_acc = carry
         bp = inp["p"]
+        paged_l = dict(paged, layer=inp["li"]) if paged is not None else None
         out, new_kv, new_ssm, aux = _block_apply(
             bp, xx, cfg, masks=masks, positions=positions,
             kv=inp.get("kv"), cache_pos=cache_pos,
             ssm_state=inp.get("ssm"), xkv=inp.get("xkv"),
-            is_global=inp.get("glob"))
+            is_global=inp.get("glob"), paged=paged_l)
         for k in aux_acc:
             aux_acc = dict(aux_acc)
             aux_acc[k] = aux_acc[k] + aux.get(k, 0.0)
@@ -195,6 +215,8 @@ def _scan_blocks(stacked, x, cfg: ModelConfig, *, masks, positions,
         xs["xkv"] = xkv
     if glob is not None:
         xs["glob"] = glob
+    if paged is not None:
+        xs["li"] = jnp.asarray(li, jnp.int32)
     (x, aux), ys = jax.lax.scan(fn, (x, _zero_aux()), xs)
     return x, aux, ys
 
@@ -396,6 +418,61 @@ def dense_decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
         xk=cache.xk, xv=cache.xv,
         length=cache.length + 1)
     return logits, new_cache
+
+
+def paged_decode_step(params, cfg: ModelConfig, tokens, k_pages, v_pages,
+                      page_tables, lengths, *, interpret: bool = True):
+    """One-token decode reading cached KV straight from the block pool via
+    the Pallas ``paged_attention`` kernel — no gathered dense view.
+
+    tokens: (B, 1) int32; k_pages/v_pages: the pool's layered
+    (L, P, page, K, dh) buffers; page_tables: (B, n_pages) int32;
+    lengths: (B,) int32 ragged per-lane cached token counts.  One page
+    table serves every layer (the pool's layer axis = one placement
+    decision per block id).
+
+    Returns (logits (B, 1, V), k_new, v_new) with k_new/v_new
+    (L, B, 1, K, dh) — the in-flight token's per-layer K/V for the
+    caller's pool write-back (write-after-attend: the kernel never reads
+    a partially-written page).
+    """
+    assert cfg.has_attention and not cfg.has_ssm \
+        and cfg.family not in ("encdec", "vlm"), \
+        f"kernel-path decode pages attention KV only (family {cfg.family!r})"
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "kernel-path decode has no sliding-window masking yet; "
+            "use the gathered dense view (decode_mode='gather')")
+    B = tokens.shape[0]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = lengths[:, None]
+    x = layers.embed_tokens(params["embed"], tokens, cfg, positions)
+    paged = dict(k_pages=k_pages, v_pages=v_pages, page_tables=page_tables,
+                 lengths=lengths, interpret=interpret)
+
+    nd = cfg.n_dense_layers if cfg.is_moe else 0
+    ys_all = {}
+    if nd:
+        x, _, ys = _scan_blocks(params["blocks_dense"], x, cfg, masks=None,
+                                positions=positions, layer_offset=0, n=nd,
+                                paged=paged)
+        ys_all["dense"] = ys
+    x, _, ys = _scan_blocks(params["blocks"], x, cfg, masks=None,
+                            positions=positions, layer_offset=nd,
+                            n=cfg.n_layers - nd, paged=paged)
+    ys_all["main"] = ys
+
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.lm_head(params["embed"], x, cfg)
+
+    def _cat(idx):
+        parts = []
+        if nd and "kv" in ys_all["dense"]:
+            parts.append(ys_all["dense"]["kv"][idx])
+        parts.append(ys_all["main"]["kv"][idx])
+        return jnp.concatenate(parts, 0)
+
+    return logits, _cat(0), _cat(1)
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache):

@@ -22,7 +22,10 @@ Two model drivers:
                  KV lives in the layered block pool, lanes decode ragged
                  (each at its own length) in one batched step, forks share
                  blocks copy-on-write.  Greedy sampling plus a per-fork
-                 salt so parallel samples diverge.
+                 salt so parallel samples diverge.  The backend's
+                 ``decode_mode`` picks the per-layer Pallas
+                 ``paged_attention`` kernel path (default) or the gathered
+                 dense-view oracle; ``use_kernel`` overrides it.
 """
 from __future__ import annotations
 
@@ -117,25 +120,33 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, pool: BlockPool, scheduler: MarsScheduler,
                  model: Optional[Union[ToyModel, PagedLM]] = None, *,
-                 max_lanes: int = 8, use_kernel: bool = False):
+                 max_lanes: int = 8, use_kernel: Optional[bool] = None):
+        """``use_kernel``: ToyModel — decode inline through the Pallas
+        kernel instead of the jnp oracle (default oracle).  PagedLM —
+        override the backend's ``decode_mode`` ("kernel"/"gather");
+        ``None`` leaves the backend as configured (kernel by default)."""
         assert pool.k_pages is not None, "engine needs a pool with KV buffers"
         self.pool = pool
         self.scheduler = scheduler
         if isinstance(model, PagedLM):
             assert model.backend.pool is pool, \
                 "PagedLM backend must share the engine's pool"
-            assert not use_kernel, \
-                "PagedLM decodes through the gathered dense view; the " \
-                "Pallas kernel path is ToyModel-only (see ROADMAP)"
+            if use_kernel is not None:
+                # sliding-window configs stay on the gather path (the
+                # kernel has no window mask yet — same rule as the backend)
+                model.backend.decode_mode = \
+                    "kernel" if use_kernel and not model.cfg.sliding_window \
+                    else "gather"
             self.model = model
             self.cache = model.backend.prefix
+            self.use_kernel = model.backend.decode_mode == "kernel"
         else:
             self.model = model or ToyModel(n_kv_heads=pool.cfg.n_kv_heads,
                                            head_dim=pool.cfg.head_dim)
             self.cache = PrefixCache(pool.cfg.block_size)
             self.cache.attach(pool)
+            self.use_kernel = bool(use_kernel)
         self.max_lanes = max_lanes
-        self.use_kernel = use_kernel
         self.running: list[SeqState] = []
         self.finished: dict[int, list] = {}
         self.stats = EngineStats()

@@ -1,5 +1,8 @@
-"""Unified KV-backend API: dense-vs-paged decode parity, layer-axis
-placement, ragged continuous-batching decode, and the full-LM engine."""
+"""Unified KV-backend API: dense-vs-paged decode parity (gathered dense
+view AND per-layer Pallas kernel path), layer-axis placement, ragged
+continuous-batching decode, and the full-LM engine."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,25 +16,37 @@ from repro.models import lm
 ARCHS = ["qwen1_5_0_5b", "starcoder2_7b", "phi3_medium_14b"]
 
 
-def _model(arch, seed=0):
+def _model(arch, seed=0, f32=False):
     cfg = configs.get_smoke(arch)
+    if f32:
+        # f32 compute removes compute-dtype near-ties, so the kernel
+        # path's f32 attention accumulation (vs the dense path's rounding
+        # through bf16) still yields identical argmaxes
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32")
     params = lm.init(cfg, jax.random.key(seed)).params
     return cfg, params
 
 
 # ---------------------------------------------------------------------------
-# dense vs paged logit parity
+# dense vs paged logit parity — gather path and kernel path
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_dense_paged_decode_parity(arch):
-    """DenseBackend and PagedBackend must produce identical logits across
-    prefill + several greedy decode steps."""
-    cfg, params = _model(arch)
+@pytest.mark.parametrize("decode_mode", ["gather", "kernel"])
+def test_dense_paged_decode_parity(arch, decode_mode):
+    """DenseBackend and PagedBackend must produce matching logits across
+    prefill + several greedy decode steps — gathered-dense-view decode
+    runs bit-identical math; kernel-path decode (Pallas paged_attention
+    per layer) must agree to accumulation-order tolerance with identical
+    argmaxes (checked in f32 compute, where no near-ties exist)."""
+    cfg, params = _model(arch, f32=decode_mode == "kernel")
     tokens = jax.random.randint(jax.random.key(1), (2, 9), 1, cfg.vocab)
 
     dense = DenseBackend(cfg, batch=2, max_seq=24)
-    paged = PagedBackend(cfg, num_blocks=64, block_size=4)
+    paged = PagedBackend(cfg, num_blocks=64, block_size=4,
+                         decode_mode=decode_mode)
+    assert paged.decode_mode == decode_mode
     lg_d, _ = lm.prefill(params, cfg, tokens, backend=dense)
     lg_p, _ = lm.prefill(params, cfg, tokens, backend=paged)
     np.testing.assert_allclose(np.asarray(lg_d, np.float32),
@@ -70,6 +85,49 @@ def test_make_backend_registry():
     # silently mis-served
     with pytest.raises(NotImplementedError):
         make_backend(configs.get_smoke("mamba2_370m"), "paged")
+
+
+def test_kernel_decode_parity_moe_layer_offsets():
+    """MoE config with a leading dense block stack (kimi: n_dense_layers=1)
+    — the kernel path's scanned absolute layer index must address the
+    right plane of the layered pool in both stacks."""
+    cfg, params = _model("kimi_k2_1t_a32b", f32=True)
+    assert cfg.is_moe and cfg.n_dense_layers > 0
+    tokens = jax.random.randint(jax.random.key(3), (2, 9), 1, cfg.vocab)
+    dense = DenseBackend(cfg, batch=2, max_seq=24)
+    paged = PagedBackend(cfg, num_blocks=64, block_size=4)
+    lg_d, _ = lm.prefill(params, cfg, tokens, backend=dense)
+    lg_p, _ = lm.prefill(params, cfg, tokens, backend=paged)
+    tok = jnp.argmax(lg_d[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        lg_d, _ = lm.decode_step(params, cfg, tok, dense)
+        lg_p, _ = lm.decode_step(params, cfg, tok, paged)
+        np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                                   np.asarray(lg_p, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+        a = np.argmax(np.asarray(lg_d[:, -1], np.float32), -1)
+        assert (a == np.argmax(np.asarray(lg_p[:, -1], np.float32),
+                               -1)).all()
+        tok = jnp.asarray(a, jnp.int32)[:, None]
+    paged.release()
+    paged.pool.check_invariants()
+
+
+def test_paged_decode_mode_selection():
+    cfg, _ = _model(ARCHS[0])
+    # kernel is the default decode path; gather stays as fallback/oracle
+    assert PagedBackend(cfg, num_blocks=16).decode_mode == "kernel"
+    assert PagedBackend(cfg, num_blocks=16,
+                        decode_mode="gather").decode_mode == "gather"
+    with pytest.raises(ValueError):
+        PagedBackend(cfg, num_blocks=16, decode_mode="telepathic")
+    # sliding-window configs fall back to the gathered dense view (the
+    # kernel has no window mask yet) instead of mis-serving
+    swin = dataclasses.replace(cfg, sliding_window=8)
+    assert PagedBackend(swin, num_blocks=16).decode_mode == "gather"
+    with pytest.raises(NotImplementedError):
+        lm.paged_decode_step({}, swin, jnp.zeros((1, 1), jnp.int32),
+                             None, None, None, jnp.zeros(1, jnp.int32))
 
 
 def test_dense_backend_exposes_concrete_cache_reads():

@@ -173,6 +173,56 @@ def test_mars_placement_bandwidth_at_least_naive():
     assert np.mean(gbps["mars"]) >= np.mean(gbps["naive"])
 
 
+def test_kernel_path_row_hits_at_least_gather():
+    """Acceptance: the Pallas kernel's sequence-major page walk must hit
+    the row buffer at least as often as the gather path's round-robin
+    lane interleave — on both placements — and at least match its
+    bandwidth (MARS placement finally reaching the kernel unflattened)."""
+    import benchmarks.kvcache_bench as kb
+    for placement in ("naive", "mars"):
+        res = kb.decode_path_comparison(placement=placement)
+        assert kb.row_hit_rate(res["kernel"]) >= \
+            kb.row_hit_rate(res["gather"]), placement
+        assert res["kernel"].achieved_gbps >= \
+            res["gather"].achieved_gbps * 0.99, placement
+
+
+def test_read_traces_accept_empty_batches():
+    """A zero-sequence decode batch from an idle engine step must flow
+    through trace -> reorder -> DRAM model without crashing (mirrors the
+    PR-1 mars_reorder empty-input fix)."""
+    from repro.core.reorder import mars_order
+    from repro.core.streams import PAGE_SHIFT
+    from repro.kvcache.prefix import BlockTable
+
+    for tables in ([], [BlockTable([], 0)]):
+        for trace_fn in (ops.kv_read_trace, ops.kv_read_trace_kernel):
+            trace = trace_fn(tables)
+            assert trace.shape == (0,) and trace.dtype == np.int32
+            perm = np.asarray(mars_order(
+                np.asarray(trace, np.int64) >> PAGE_SHIFT))
+            assert perm.shape == (0,)
+            res = dram.simulate(np.asarray(trace)[perm])
+            assert res.n_requests == 0 and res.achieved_gbps == 0.0
+    # empty lanes drop out of a mixed batch instead of poisoning it
+    mixed = [BlockTable([], 0), BlockTable([3, 7], 30)]
+    assert len(ops.kv_read_trace(mixed)) == 2 * 64
+    assert len(ops.kv_read_trace_kernel(mixed)) == 2 * 64
+
+
+def test_pool_page_tables_lane_padding():
+    from repro.kvcache.prefix import BlockTable
+    pt, ln = ops.pool_page_tables(
+        [BlockTable([5, 2], 20), BlockTable([9], 4)],
+        pad_to=4, pad_lanes=4)
+    assert pt.shape == (4, 4) and ln.shape == (4,)
+    assert list(pt[0][:2]) == [5, 2] and pt[1][0] == 9
+    assert list(ln) == [20, 4, 0, 0]     # padded lanes are length-0
+    # no tables at all: still a well-formed (possibly 0-lane) operand
+    pt0, ln0 = ops.pool_page_tables([])
+    assert pt0.shape == (0, 1) and ln0.shape == (0,)
+
+
 # ---------------------------------------------------------------------------
 # randomized alloc/share/free soak
 # ---------------------------------------------------------------------------

@@ -218,7 +218,9 @@ def test_stats_count_prefill_and_decode_tokens_separately():
 # engine: real multi-layer LM through PagedBackend
 # ---------------------------------------------------------------------------
 
-def _lm_engine(num_blocks=96, max_lanes=3, block_size=8):
+def _lm_engine(num_blocks=96, max_lanes=3, block_size=8,
+               decode_mode="gather", f32=False):
+    import dataclasses
     import jax
     from repro import configs
     from repro.kvcache.backend import PagedBackend
@@ -226,9 +228,12 @@ def _lm_engine(num_blocks=96, max_lanes=3, block_size=8):
     from repro.serve.engine import PagedLM
 
     cfg = configs.get_smoke("qwen1_5_0_5b")
+    if f32:
+        cfg = dataclasses.replace(cfg, param_dtype="float32",
+                                  compute_dtype="float32")
     params = lm.init(cfg, jax.random.key(0)).params
     backend = PagedBackend(cfg, num_blocks=num_blocks,
-                           block_size=block_size)
+                           block_size=block_size, decode_mode=decode_mode)
     eng = ServeEngine(backend.pool, MarsScheduler(pool=backend.pool),
                       PagedLM(params, cfg, backend), max_lanes=max_lanes)
     return eng, cfg, params
@@ -236,7 +241,8 @@ def _lm_engine(num_blocks=96, max_lanes=3, block_size=8):
 
 def test_engine_real_lm_matches_dense_greedy():
     """Continuous-batched paged serving of a real 2-layer config must emit
-    exactly the dense backend's greedy tokens, lane for lane."""
+    exactly the dense backend's greedy tokens, lane for lane (gather-path
+    decode: bit-identical math to the dense backend)."""
     import jax.numpy as jnp
     from repro.serve.step import greedy_generate
 
@@ -253,6 +259,31 @@ def test_engine_real_lm_matches_dense_greedy():
     for i, p in enumerate(prompts):
         want = greedy_generate(params, cfg, jnp.asarray([p], jnp.int32),
                                4, max_seq=len(p) + 5)
+        assert out[i][0] == list(np.asarray(want[0])), f"lane {i} diverged"
+    eng.pool.check_invariants()
+    assert eng.pool.num_live == 0 and eng.pool.reserved == 0
+
+
+def test_engine_real_lm_kernel_decode_matches_dense_greedy():
+    """Kernel-path decode (per-layer Pallas paged_attention over the pool)
+    through the full engine loop must emit exactly the dense backend's
+    greedy tokens in f32 compute — the tentpole invariant end-to-end."""
+    import jax.numpy as jnp
+    from repro.serve.step import greedy_generate
+
+    eng, cfg, params = _lm_engine(decode_mode="kernel", f32=True)
+    assert eng.use_kernel
+    rng = np.random.default_rng(5)
+    shared = tuple(int(t) for t in rng.integers(1, cfg.vocab, 16))
+    prompts = [shared + tuple(int(t) for t in rng.integers(1, cfg.vocab, 2))
+               for _ in range(4)]
+    reqs = [Request(rid=i, prompt=p, arrival=i * 1e-3, prefix_len=8,
+                    max_new=3) for i, p in enumerate(prompts)]
+    out = eng.run(reqs)
+    assert sorted(out) == list(range(4))
+    for i, p in enumerate(prompts):
+        want = greedy_generate(params, cfg, jnp.asarray([p], jnp.int32),
+                               3, max_seq=len(p) + 4)
         assert out[i][0] == list(np.asarray(want[0])), f"lane {i} diverged"
     eng.pool.check_invariants()
     assert eng.pool.num_live == 0 and eng.pool.reserved == 0
