@@ -107,24 +107,37 @@ def row_hit_rate(res) -> float:
 
 
 def decode_path_comparison(*, placement: str = "mars", n_live: int = 16,
-                           grant_beats: int = 4, seed: int = 0) -> dict:
+                           grant_beats: int = 4, window_tokens: int = 0,
+                           seed: int = 0, paths=("gather", "kernel"),
+                           pool_tables=None) -> dict:
     """{path: DramResult} for one decode step over the same churned pool.
 
     ``gather``  the dense-view path: every lane's pages gathered in
                 parallel, so the memory system sees the round-robin
-                interleave of the per-lane streams.
+                interleave of the per-lane streams.  A sliding window
+                does not shrink this stream — the dense view gathers the
+                whole table and masks afterwards.
     ``kernel``  the Pallas ``paged_attention`` path: the grid walks lanes
                 one after another, each lane's pages in page-table order,
                 page-contiguously — MARS placement finally reaches the
-                attention kernel's address stream unflattened.
+                attention kernel's address stream unflattened.  With
+                ``window_tokens`` > 0 the kernel's window page gate also
+                drops pages entirely outside the sliding window from the
+                address stream.
     """
-    pool, tables = churned_pool(placement, n_live=n_live,
-                                churn_events=600, seed=seed)
-    return {
-        "gather": dram.simulate(
-            ops.kv_read_trace(tables, grant_beats=grant_beats)),
-        "kernel": dram.simulate(ops.kv_read_trace_kernel(tables)),
-    }
+    if pool_tables is None:
+        pool_tables = churned_pool(placement, n_live=n_live,
+                                   churn_events=600, seed=seed)
+    pool, tables = pool_tables
+    out = {}
+    if "gather" in paths:
+        out["gather"] = dram.simulate(
+            ops.kv_read_trace(tables, grant_beats=grant_beats))
+    if "kernel" in paths:
+        out["kernel"] = dram.simulate(ops.kv_read_trace_kernel(
+            tables, window_tokens=window_tokens,
+            block_size=pool.cfg.block_size))
+    return out
 
 
 def zipf_requests(n_requests: int, n_prefixes: int, zipf_a: float,
@@ -202,15 +215,33 @@ def run(emit, smoke: bool = False) -> None:
     # decode-path bandwidth: gather-path interleave vs the kernel's
     # sequence-major page walk, same MARS-placed pool — the first
     # end-to-end measurement of placement reaching the attention kernel
+    mars_pt = None
     for placement in ("naive", "mars"):
         t0 = time.perf_counter()
-        res = decode_path_comparison(placement=placement)
+        pt = churned_pool(placement, n_live=16, churn_events=600, seed=0)
+        res = decode_path_comparison(placement=placement, pool_tables=pt)
         us = (time.perf_counter() - t0) * 1e6
+        if placement == "mars":
+            mars_pt = pt
         for path, r in res.items():
             emit(f"kvcache/decode/{path}/{placement}", us / 2,
                  f"{r.achieved_gbps:.2f}GB/s")
             emit(f"kvcache/decode/{path}/{placement}/rowhit", us / 2,
                  f"{100 * row_hit_rate(r):.2f}%")
+    # sliding-window decode: the kernel's window page gate drops
+    # out-of-window pages from its walk; the gather path still fetches
+    # the full table, so its window trace is identical to the
+    # kvcache/decode/gather/mars rows above — only the kernel re-traces,
+    # over the same churned pool
+    t0 = time.perf_counter()
+    res = decode_path_comparison(window_tokens=64, paths=("kernel",),
+                                 pool_tables=mars_pt)
+    us = (time.perf_counter() - t0) * 1e6
+    r = res["kernel"]
+    emit("kvcache/decode/kernel/mars/window64", us,
+         f"{r.achieved_gbps:.2f}GB/s")
+    emit("kvcache/decode/kernel/mars/window64/rowhit", us,
+         f"{100 * row_hit_rate(r):.2f}%")
     # FIFO vs LRU under skewed prefix popularity
     n_requests = 150 if smoke else 400
     for zipf_a in (0.8, 1.3):

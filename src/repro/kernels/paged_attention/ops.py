@@ -80,20 +80,45 @@ def kv_read_trace(tables: Sequence, *, grant_beats: int = 4,
 
 
 def kv_read_trace_kernel(tables: Sequence, *,
-                         lines_per_block: int = LINES_PER_BLOCK
-                         ) -> np.ndarray:
+                         lines_per_block: int = LINES_PER_BLOCK,
+                         window_tokens: int = 0,
+                         block_size: int = 16) -> np.ndarray:
     """64B-line addresses of one decode step's KV reads as the Pallas
     ``paged_attention`` grid issues them: lanes served one after another
     (grid axis 0), each lane's pages in page-table order (grid axis 1),
     lines within a page contiguous.  No cross-lane interleave ever reaches
     the memory system — the kernel-path rendering of the MARS reorder.
+
+    ``window_tokens`` > 0 models the kernel's sliding-window page gate: a
+    query at position ``num_tokens`` attends cached positions
+    ``(num_tokens - window, num_tokens)`` only, so pages entirely outside
+    the window are never fetched (the gather path has no such gate — it
+    gathers the full table and masks afterwards).
     """
-    chunks = [_lane_lines(t, lines_per_block) for t in tables if t.blocks]
+    chunks = [_lane_lines(t, lines_per_block,
+                          window_tokens=window_tokens,
+                          block_size=block_size)
+              for t in tables if t.blocks]
+    chunks = [c for c in chunks if c.size]
     if not chunks:
         return np.zeros(0, np.int32)
     return np.concatenate(chunks)
 
 
-def _lane_lines(table, lines_per_block: int) -> np.ndarray:
-    base = np.asarray(table.blocks, np.int64)[:, None] * lines_per_block
+def _lane_lines(table, lines_per_block: int, *, window_tokens: int = 0,
+                block_size: int = 16) -> np.ndarray:
+    blocks = table.blocks
+    if window_tokens:
+        # first valid cached position for the in-flight query (canonical
+        # definition: paged_attention ref._window_lo).  A window of 1
+        # admits no cached position (lo == num_tokens), but the kernel's
+        # clamped index map still names one in-range page per lane — the
+        # pipeline DMAs it even though the body never runs — so model a
+        # single residual page, not an empty trace.
+        lo = table.num_tokens - window_tokens + 1
+        if lo >= table.num_tokens:
+            blocks = blocks[-1:]
+        else:
+            blocks = blocks[max(lo, 0) // block_size:]
+    base = np.asarray(blocks, np.int64)[:, None] * lines_per_block
     return (base + np.arange(lines_per_block)).reshape(-1).astype(np.int32)

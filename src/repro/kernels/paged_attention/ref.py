@@ -8,7 +8,10 @@ sequence over its first ``length`` cached positions.
 ``paged_decode_ref`` is the full decode-step oracle: cached positions
 *plus* the in-flight token's K/V, computed with one plain softmax over the
 concatenated keys — what ``paged_attention.decode_attend`` must match.
-Both accept 4-D pages or a layered 5-D pool buffer with ``layer``.
+Both accept 4-D pages or a layered 5-D pool buffer with ``layer``, and a
+``window`` > 0 sliding-window restriction (query at position ``length``,
+so valid cached positions are ``(length - window, length)``; the
+in-flight token is always inside the window).
 """
 from __future__ import annotations
 
@@ -23,11 +26,17 @@ def _layer_plane(k_pages, v_pages, layer):
     return k_pages, v_pages
 
 
+def _window_lo(ln, window):
+    """First valid cached position for a query at position ``ln``."""
+    w = jnp.asarray(window, jnp.int32)
+    return jnp.where(w > 0, ln - w + 1, 0)
+
+
 def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths,
-                        layer=0):
+                        layer=0, window=0):
     """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D) or layered
     (L, P, page, Hkv, D); page_tables: int32 (B, pages_per_seq);
-    lengths: int32 (B,).
+    lengths: int32 (B,); ``window`` 0 = global.
 
     Returns (B, H, D).  GQA via H % Hkv == 0 head repetition."""
     B, H, D = q.shape
@@ -42,7 +51,8 @@ def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths,
         k = jnp.repeat(k, n_rep, axis=1)
         v = jnp.repeat(v, n_rep, axis=1)
         s = jnp.einsum("hd,khd->hk", qb, k).astype(jnp.float32) * scale
-        mask = jnp.arange(k.shape[0]) < ln
+        pos = jnp.arange(k.shape[0])
+        mask = (pos < ln) & (pos >= _window_lo(ln, window))
         s = jnp.where(mask[None, :], s, -1e30)
         w = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("hk,khd->hd", w.astype(qb.dtype), v)
@@ -51,9 +61,11 @@ def paged_attention_ref(q, k_pages, v_pages, page_tables, lengths,
 
 
 def paged_decode_ref(q, k_new, v_new, k_pages, v_pages, page_tables,
-                     lengths, layer=0):
+                     lengths, layer=0, window=0):
     """Decode-step oracle: attend the cached pages AND the in-flight
-    token (k_new/v_new: (B, Hkv, D)) with one flat softmax.
+    token (k_new/v_new: (B, Hkv, D)) with one flat softmax; ``window``
+    > 0 restricts the cached positions to the sliding window (the
+    in-flight token is always attended).
 
     Returns (B, H, D)."""
     B, H, D = q.shape
@@ -73,9 +85,12 @@ def paged_decode_ref(q, k_new, v_new, k_pages, v_pages, page_tables,
                        qb.astype(jnp.float32),
                        k.astype(jnp.float32)) * scale
         S = k.shape[0]
-        # cached positions < ln are valid; the final slot is the in-flight
-        # token itself (its own causal context) — always attended
-        mask = (jnp.arange(S) < ln) | (jnp.arange(S) == S - 1)
+        pos = jnp.arange(S)
+        # cached positions inside [window lo, ln) are valid; the final
+        # slot is the in-flight token itself (its own causal context,
+        # always inside the window) — always attended
+        mask = ((pos < ln) & (pos >= _window_lo(ln, window))) \
+            | (pos == S - 1)
         s = jnp.where(mask[None, :], s, -1e30)
         w = jax.nn.softmax(s, axis=-1)
         return jnp.einsum("hk,khd->hd", w,

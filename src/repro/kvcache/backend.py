@@ -14,6 +14,9 @@ K/V, ``decode_step`` advances every lane one token.  Two implementations:
                  token's per-layer blocks in one DRAM row group).  Supports
                  ragged continuous-batching decode, prefix sharing and
                  copy-on-write forks, and is what ``serve.engine`` drives.
+                 Hybrid (attention + SSM) families keep their per-sequence
+                 SSM/conv decode state host-side next to the block tables
+                 (forked with the sequence, freed with it).
 
 Decode through the paged backend has two modes (``decode_mode``):
 
@@ -22,16 +25,24 @@ Decode through the paged backend has two modes (``decode_mode``):
              ``paged_attention`` kernel (online-softmax merge of the
              in-flight token) — the MARS placement decisions *are* the
              kernel's page-walk addresses, nothing is flattened first.
+             Sliding-window configs run natively: the scan flips the
+             kernel's window mask per layer (``global_every`` hybrids
+             keep their global layers unmasked).
   "gather"   the fallback/oracle: gather each lane's pages into a dense
              per-layer view and run the *same* ``lm.dense_decode_step``
              math as the dense backend, so gather-path logits agree with
-             the dense backend bit-for-bit.  Sliding-window configs fall
-             back here automatically (the kernel has no window mask yet).
+             the dense backend bit-for-bit.
 
 Either way the new token's K/V is extracted from the step and written
 back into the pool host-side after attention (the pool mutates in place,
 exactly like the single-layer engine of PR 1), so the kernel never reads
-a partially-written page.
+a partially-written page.  The pool buffers are staged to device through
+a mirror that re-uploads only the blocks dirtied since the previous step
+(``BlockPool.drain_dirty``) — never the whole pool per token.
+
+A released backend (``release()``) raises a clear "backend released"
+error from every serving entry point instead of an opaque NoneType /
+KeyError; build a new backend to serve again.
 
 Adding a backend: implement ``prefill``/``decode_step``/``lengths``/
 ``release`` against ``lm.prefill_parts`` (storage-agnostic prompt run)
@@ -101,21 +112,30 @@ class DenseBackend:
         self.max_seq = max_seq
         self._cache = lm.init_dense_cache(cfg, batch, max_seq, enc_len)
 
+    def _check_released(self) -> None:
+        if self._cache is None:
+            raise RuntimeError(
+                "DenseBackend released: release() dropped the cache "
+                "storage; build a new backend to serve again")
+
     # -- backend API --------------------------------------------------------
 
     def prefill(self, params, tokens, frontend_emb=None):
         from repro.models import lm
+        self._check_released()
         logits, self._cache = lm.dense_prefill(
             params, self.cfg, tokens, self.max_seq, frontend_emb)
         return logits
 
     def decode_step(self, params, tokens):
+        self._check_released()
         logits, self._cache = _dense_decode(params, self.cfg, tokens,
                                             self._cache)
         return logits
 
     @property
     def lengths(self) -> np.ndarray:
+        self._check_released()
         ln = np.asarray(self._cache.length, np.int32)
         return np.broadcast_to(np.atleast_1d(ln), (self.batch,)).copy()
 
@@ -131,6 +151,10 @@ class DenseBackend:
     def __getattr__(self, name):
         # k / v / ssm / conv / xk / xv / length forwarded to the pytree
         if name in ("k", "v", "ssm", "conv", "xk", "xv", "length"):
+            if self.__dict__.get("_cache") is None:
+                raise RuntimeError(
+                    f"DenseBackend released: cannot read .{name} after "
+                    "release(); build a new backend to serve again")
             return getattr(self._cache, name)
         raise AttributeError(name)
 
@@ -141,14 +165,16 @@ class DenseBackend:
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _paged_decode(params, cfg, tokens, k_pages, v_pages, page_tables,
-                  lengths):
+                  lengths, ssm, conv):
     """Gather each lane's pages into a dense per-layer view, run the ragged
     dense decode step, and extract the new token's K/V for write-back.
 
     k/v_pages: (L, P, page, K, dh); page_tables: (B, n_pages) int32;
     lengths: (B,) int32 — the padded view always has room for slot
     ``lengths[b]`` (the backend pads the table before calling).
-    Returns (logits, k_new (L, B, 1, K, dh), v_new).
+    ssm/conv: hybrid side state (L, B, H, P, N) / (L, B, k-1, ch), or
+    None for attention-only families.
+    Returns (logits, k_new (L, B, 1, K, dh), v_new, ssm_new, conv_new).
     """
     from repro.models import lm
     L = k_pages.shape[0]
@@ -156,30 +182,40 @@ def _paged_decode(params, cfg, tokens, k_pages, v_pages, page_tables,
     B = tokens.shape[0]
     k = k_pages[:, page_tables].reshape(L, B, -1, K, dh)
     v = v_pages[:, page_tables].reshape(L, B, -1, K, dh)
-    cache = lm.Cache(k=k, v=v, ssm=None, conv=None, xk=None, xv=None,
+    cache = lm.Cache(k=k, v=v, ssm=ssm, conv=conv, xk=None, xv=None,
                      length=lengths)
     logits, new = lm.dense_decode_step(params, cfg, tokens, cache)
     idx = lengths.astype(jnp.int32)[None, :, None, None, None]
     k_new = jnp.take_along_axis(new.k, idx, axis=2)
     v_new = jnp.take_along_axis(new.v, idx, axis=2)
-    return logits, k_new, v_new
+    return logits, k_new, v_new, new.ssm, new.conv
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def _paged_decode_kernel(params, cfg, tokens, k_pages, v_pages,
-                         page_tables, lengths, interpret=True):
+                         page_tables, lengths, ssm, conv, interpret=True):
     """Kernel-path decode: per-layer Pallas paged attention straight over
     the pool's layered page buffers (no dense gather).  Same operand and
     result shapes as ``_paged_decode``."""
     from repro.models import lm
     return lm.paged_decode_step(params, cfg, tokens, k_pages, v_pages,
-                                page_tables, lengths, interpret=interpret)
+                                page_tables, lengths, ssm_state=ssm,
+                                conv_state=conv, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _jit_prefill_parts(params, cfg, tokens):
     from repro.models import lm
     return lm.prefill_parts(params, cfg, tokens)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_blocks(dev, idx, vals):
+    """Write dirty block planes into the device mirror.  The mirror is
+    donated so XLA updates it in place — no pool-sized device copy per
+    step.  ``idx`` may repeat (pow2 padding); duplicate indices write the
+    same value twice, harmlessly."""
+    return dev.at[:, idx].set(vals)
 
 
 def _pow2(n: int) -> int:
@@ -191,6 +227,11 @@ class _PagedSeq:
     sid: int
     table: BlockTable
     tokens: list            # tokens whose KV is cached
+    # hybrid side state the pool cannot hold: per-sequence SSM recurrent
+    # state (L, H, P, N) float32 and conv trailing context (L, k-1, ch),
+    # host-side, forked with the sequence, freed with it
+    ssm: Optional[np.ndarray] = None
+    conv: Optional[np.ndarray] = None
 
 
 class PagedBackend:
@@ -213,17 +254,15 @@ class PagedBackend:
                  placement: str = "mars", eviction: str = "fifo",
                  share_prefixes: bool = True, decode_mode: str = "kernel",
                  kernel_interpret: bool = True):
-        if not cfg.has_attention or cfg.has_ssm or cfg.enc_layers \
+        if not cfg.has_attention or cfg.enc_layers \
                 or cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
-                f"PagedBackend pages attention KV only; family "
-                f"{cfg.family!r} needs state the pool does not hold yet")
+                f"PagedBackend pages attention KV plus per-sequence "
+                f"SSM/conv decode state; family {cfg.family!r} needs "
+                f"state the pool does not hold yet (encoder KV / "
+                f"frontend prefixes, or has no attention KV at all)")
         if decode_mode not in ("kernel", "gather"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
-        if cfg.sliding_window:
-            # the Pallas kernel has no sliding-window mask yet; the dense
-            # gather path applies the window exactly like DenseBackend
-            decode_mode = "gather"
         self.decode_mode = decode_mode
         self.kernel_interpret = kernel_interpret
         self.cfg = cfg
@@ -246,6 +285,44 @@ class PagedBackend:
         self._seqs: dict[int, _PagedSeq] = {}
         self._next_sid = 0
         self._batch: list[int] = []      # batch-level API lane order
+        self._released = False
+        # device mirror of the pool's KV buffers: decode re-stages only
+        # blocks dirtied since the previous step (this backend is the
+        # pool's single drain_dirty consumer)
+        self._k_dev = self._v_dev = None
+        self.staged_blocks_last_step = 0
+
+    def _check_released(self) -> None:
+        if self._released:
+            raise RuntimeError(
+                "PagedBackend released: release() returned every block "
+                "to the pool; build a new backend to serve again")
+
+    # -- device staging ------------------------------------------------------
+
+    def _staged_pages(self):
+        """Stage the pool's host-mutated KV buffers to device, uploading
+        only blocks written since the last call (full upload first time).
+        ``staged_blocks_last_step`` records how many blocks moved."""
+        pool = self.pool
+        if self._k_dev is None:
+            pool.drain_dirty()           # full upload covers everything
+            self._k_dev = jnp.asarray(pool.k_pages)
+            self._v_dev = jnp.asarray(pool.v_pages)
+            self.staged_blocks_last_step = pool.cfg.num_blocks
+        else:
+            dirty = pool.drain_dirty()
+            self.staged_blocks_last_step = len(dirty)
+            if dirty:
+                # pad the id list to a power of two (repeating the last
+                # id) so the donated scatter compiles O(log) variants
+                pad = dirty + [dirty[-1]] * (_pow2(len(dirty)) - len(dirty))
+                idx = jnp.asarray(pad, jnp.int32)
+                self._k_dev = _scatter_blocks(
+                    self._k_dev, idx, jnp.asarray(pool.k_pages[:, pad]))
+                self._v_dev = _scatter_blocks(
+                    self._v_dev, idx, jnp.asarray(pool.v_pages[:, pad]))
+        return self._k_dev, self._v_dev
 
     # -- sequence-level API (continuous batching) ---------------------------
 
@@ -260,14 +337,25 @@ class PagedBackend:
 
     def _add_seqs(self, params, tokens: np.ndarray,
                   on_alloc=None) -> tuple[Any, list[int], list[int]]:
-        """Batched prompt prefill -> one new sequence per row."""
+        """Batched prompt prefill -> one new sequence per row.
+
+        Atomic under pool exhaustion: if any row's ``table.extend``
+        raises, the partial table (prefix-matched increfed blocks plus
+        blocks allocated before the failure) is decref'd back and rows
+        already added by this call are freed, then the error re-raises —
+        nothing stays live.
+        """
+        self._check_released()
         B, S = tokens.shape
-        bs = self.pool.cfg.block_size
         logits, parts = _jit_prefill_parts(
             params, self.cfg, jnp.asarray(tokens, jnp.int32))
         kvd = self.cfg.kvdtype
         k_all = np.asarray(parts["k"].astype(kvd))   # (L, B, S, K, dh)
         v_all = np.asarray(parts["v"].astype(kvd))
+        ssm_all = conv_all = None
+        if self.cfg.has_ssm:
+            ssm_all = np.asarray(parts["ssm"], np.float32)
+            conv_all = np.asarray(parts["conv"])
         sids, shared = [], []
         for b in range(B):
             prompt = [int(t) for t in tokens[b]]
@@ -277,12 +365,27 @@ class PagedBackend:
                 bids, n = [], 0
             table = BlockTable(list(bids), n)
             allocs0 = self.pool.stats.allocs
-            table.extend(self.pool, prompt[n:], seq_tokens=prompt,
-                         cache=self.prefix if self.share_prefixes else None,
-                         kv=(k_all[:, b, n:], v_all[:, b, n:]))
+            try:
+                table.extend(
+                    self.pool, prompt[n:], seq_tokens=prompt,
+                    cache=self.prefix if self.share_prefixes else None,
+                    kv=(k_all[:, b, n:], v_all[:, b, n:]))
+            except RuntimeError:
+                # roll back: this row's partial table (registered blocks
+                # stay as evictable cache, private ones free), then the
+                # rows this call already created — batched prefill is
+                # all-or-nothing
+                self.prefix.release(table, self.pool)
+                for sid in sids:
+                    self.free_seq(sid)
+                raise
             sid = self._next_sid
             self._next_sid += 1
-            self._seqs[sid] = _PagedSeq(sid, table, list(prompt))
+            seq = _PagedSeq(sid, table, list(prompt))
+            if ssm_all is not None:
+                seq.ssm = np.ascontiguousarray(ssm_all[:, b])
+                seq.conv = np.ascontiguousarray(conv_all[:, b])
+            self._seqs[sid] = seq
             if on_alloc is not None:
                 on_alloc(sid, self.pool.stats.allocs - allocs0)
             sids.append(sid)
@@ -290,18 +393,23 @@ class PagedBackend:
         return np.asarray(logits[:, 0], np.float32), sids, shared
 
     def fork_seq(self, sid: int) -> int:
-        """Fork a sequence, sharing every block (CoW on first append)."""
+        """Fork a sequence, sharing every block (CoW on first append);
+        the hybrid side state is copied — it is mutated every step."""
+        self._check_released()
         src = self._seqs[sid]
         nsid = self._next_sid
         self._next_sid += 1
-        self._seqs[nsid] = _PagedSeq(nsid, src.table.fork(self.pool),
-                                     list(src.tokens))
+        self._seqs[nsid] = _PagedSeq(
+            nsid, src.table.fork(self.pool), list(src.tokens),
+            ssm=None if src.ssm is None else src.ssm.copy(),
+            conv=None if src.conv is None else src.conv.copy())
         return nsid
 
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
                on_alloc: Optional[Callable[[int, int], None]] = None):
         """One ragged decode step: feed ``tokens[i]`` to sequence
         ``sids[i]``, cache its K/V, return next-token logits (n, V)."""
+        self._check_released()
         assert sids, "no active sequences to decode (prefill first)"
         from repro.kernels.paged_attention import ops
         seqs = [self._seqs[s] for s in sids]
@@ -317,36 +425,74 @@ class PagedBackend:
             [s.table for s in seqs], pad_to=n_pages, pad_lanes=Bp)
         toks = np.zeros((Bp, 1), np.int32)
         toks[:B, 0] = list(tokens)
-        kp = jnp.asarray(self.pool.k_pages)
-        vp = jnp.asarray(self.pool.v_pages)
+        kp, vp = self._staged_pages()
+        ssm = conv = None
+        if self.cfg.has_ssm:
+            # batch the per-sequence hybrid side state (padded lanes get
+            # zeros; their outputs are discarded below)
+            L = self.cfg.n_layers
+            ssm_np = np.zeros((L, Bp) + seqs[0].ssm.shape[1:],
+                              seqs[0].ssm.dtype)
+            conv_np = np.zeros((L, Bp) + seqs[0].conv.shape[1:],
+                               seqs[0].conv.dtype)
+            for i, s in enumerate(seqs):
+                ssm_np[:, i] = s.ssm
+                conv_np[:, i] = s.conv
+            ssm = jnp.asarray(ssm_np)
+            conv = jnp.asarray(conv_np)
         if self.decode_mode == "kernel":
-            logits, k_new, v_new = _paged_decode_kernel(
+            logits, k_new, v_new, ssm_new, conv_new = _paged_decode_kernel(
                 params, self.cfg, jnp.asarray(toks), kp, vp,
-                jnp.asarray(pt), jnp.asarray(lengths),
+                jnp.asarray(pt), jnp.asarray(lengths), ssm, conv,
                 interpret=self.kernel_interpret)
         else:
-            logits, k_new, v_new = _paged_decode(
+            logits, k_new, v_new, ssm_new, conv_new = _paged_decode(
                 params, self.cfg, jnp.asarray(toks), kp, vp,
-                jnp.asarray(pt), jnp.asarray(lengths))
+                jnp.asarray(pt), jnp.asarray(lengths), ssm, conv)
         k_new = np.asarray(k_new)           # (L, Bp, 1, K, dh)
         v_new = np.asarray(v_new)
+        if ssm_new is not None:
+            ssm_new = np.asarray(ssm_new)   # (L, Bp, H, P, N)
+            conv_new = np.asarray(conv_new)
+        # capacity precheck so the write-back loop cannot die halfway
+        # (rolling back a committed lane would mean undoing CoW/eviction
+        # side effects): each lane needs at most one fresh block — a new
+        # tail, or a CoW copy of a shared tail.  Raising here leaves
+        # every sequence exactly as it was before the step.
+        need = 0
+        for s in seqs:
+            fill = s.table.num_tokens % page
+            if fill == 0 or \
+                    self.pool.refcount[s.table.blocks[-1]] > 1:
+                need += 1
+        if not self.pool.can_alloc(need):
+            raise RuntimeError(
+                f"pool exhausted: decode step needs {need} blocks, "
+                f"free {self.pool.num_free}, cached {self.pool.num_cached}")
         for i, (s, tok) in enumerate(zip(seqs, tokens)):
             allocs0 = self.pool.stats.allocs
-            s.tokens.append(int(tok))
+            new_tokens = s.tokens + [int(tok)]
             s.table.extend(
-                self.pool, [int(tok)], seq_tokens=s.tokens,
+                self.pool, [int(tok)], seq_tokens=new_tokens,
                 cache=self.prefix if self.share_prefixes else None,
                 kv=(k_new[:, i], v_new[:, i]))
+            s.tokens = new_tokens     # commit only after the extend
+            if ssm_new is not None:
+                s.ssm = np.ascontiguousarray(ssm_new[:, i])
+                s.conv = np.ascontiguousarray(conv_new[:, i])
             if on_alloc is not None:
                 on_alloc(s.sid, self.pool.stats.allocs - allocs0)
         return np.asarray(logits[:B, 0], np.float32)
 
     def free_seq(self, sid: int) -> None:
-        """Finished sequence: registered prefix blocks stay evictable."""
+        """Finished sequence: registered prefix blocks stay evictable;
+        the hybrid side state dies with the sequence."""
+        self._check_released()
         seq = self._seqs.pop(sid)
         self.prefix.release(seq.table, self.pool)
 
     def table(self, sid: int) -> BlockTable:
+        self._check_released()
         return self._seqs[sid].table
 
     def block_of(self, sid: int, layer: int, token_index: int) -> int:
@@ -360,19 +506,23 @@ class PagedBackend:
     # -- batch-level KVBackend API ------------------------------------------
 
     def prefill(self, params, tokens, frontend_emb=None):
+        self._check_released()
         assert frontend_emb is None, "paged backend has no frontend state"
-        for sid in self._batch:      # re-prefill replaces the batch lanes
+        old, self._batch = self._batch, []
+        for sid in old:              # re-prefill replaces the batch lanes
             self.free_seq(sid)
         logits, self._batch, _ = self._add_seqs(params, np.asarray(tokens))
         return jnp.asarray(logits)[:, None, :]
 
     def decode_step(self, params, tokens):
+        self._check_released()
         toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
         logits = self.decode(params, self._batch, toks)
         return jnp.asarray(logits)[:, None, :]
 
     @property
     def lengths(self) -> np.ndarray:
+        self._check_released()
         return np.asarray(
             [self._seqs[s].table.num_tokens for s in self._batch], np.int32)
 
@@ -380,6 +530,8 @@ class PagedBackend:
         for sid in list(self._seqs):
             self.free_seq(sid)
         self._batch = []
+        self._k_dev = self._v_dev = None
+        self._released = True
 
 
 def make_backend(cfg: ModelConfig, kind: str = "dense", *,

@@ -104,6 +104,10 @@ class BlockPool:
         # .at[].set would copy the whole pool per token); staged to device
         # once per engine step when the kernel consumes it
         self.k_pages = self.v_pages = None
+        # blocks whose payload changed since the last drain_dirty() —
+        # lets a device mirror re-stage only what was written instead of
+        # the whole pool every step (single consumer: whoever drains)
+        self.dirty: set[int] = set()
         if cfg.n_kv_heads is not None and cfg.head_dim is not None:
             shape = (cfg.n_layers, n, cfg.block_size,
                      cfg.n_kv_heads, cfg.head_dim)
@@ -228,6 +232,7 @@ class BlockPool:
         assert offset + t <= self.cfg.block_size
         self.k_pages[:, bid, offset:offset + t] = k
         self.v_pages[:, bid, offset:offset + t] = v
+        self.dirty.add(bid)
 
     def copy_block(self, src: int, dst: int) -> None:
         """Copy-on-write payload copy (content tag + all layer planes)."""
@@ -235,7 +240,15 @@ class BlockPool:
         if self.k_pages is not None:
             self.k_pages[:, dst] = self.k_pages[:, src]
             self.v_pages[:, dst] = self.v_pages[:, src]
+            self.dirty.add(dst)
         self.stats.cow_copies += 1
+
+    def drain_dirty(self) -> list[int]:
+        """Block ids written since the last drain (sorted), clearing the
+        set — the device-mirror staging contract of ``PagedBackend``."""
+        out = sorted(self.dirty)
+        self.dirty.clear()
+        return out
 
     # -- invariants ---------------------------------------------------------
 

@@ -90,7 +90,10 @@ def main_paged(args):
     in the layered block pool, ragged lanes, prefix sharing, CoW forks.
     Decode runs through the per-layer Pallas ``paged_attention`` kernel
     (``--kernel-decode``, default) or the gathered dense view
-    (``--no-kernel-decode``).  Cross-checks a sample of served sequences
+    (``--no-kernel-decode``).  Sliding-window configs decode on the
+    kernel path natively (per-layer window mask), and hybrid families
+    (``--config hymba_1_5b``) carry their per-sequence SSM/conv state
+    through the backend.  Cross-checks a sample of served sequences
     against the dense backend for end-to-end token parity."""
     if args.toy:
         return main_paged_toy(args)
@@ -167,7 +170,8 @@ def main(argv=None):
     ap.add_argument("--kernel-decode", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="with --paged: decode through the per-layer Pallas "
-                         "paged_attention kernel (default on); "
+                         "paged_attention kernel (default on; sliding-"
+                         "window and hybrid configs included); "
                          "--no-kernel-decode uses the gathered dense view")
     ap.add_argument("--toy", action="store_true",
                     help="with --paged: single-layer ToyModel engine demo")

@@ -281,7 +281,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, positions, mask,
 
 
 def paged_attention_apply(p, x, cfg: ModelConfig, *, lengths, k_pages,
-                          v_pages, page_tables, layer,
+                          v_pages, page_tables, layer, window=0,
                           interpret: bool = True):
     """Decode attention reading cached KV straight from the block pool via
     the Pallas ``paged_attention`` kernel (kernel over the cached pages +
@@ -289,8 +289,10 @@ def paged_attention_apply(p, x, cfg: ModelConfig, *, lengths, k_pages,
 
     x: (B, 1, d); k_pages/v_pages: the pool's layered (L, P, page, K, dh)
     buffers; ``layer`` selects the plane — one page table serves every
-    layer.  Returns (out (B, 1, d), (k_new, v_new) each (B, 1, K, dh),
-    post-RoPE, for pool write-back after the step).
+    layer.  ``window`` > 0 applies the kernel's sliding-window mask (a
+    traced int32, so a scan over a ``global_every`` hybrid's layers flips
+    it per layer).  Returns (out (B, 1, d), (k_new, v_new) each
+    (B, 1, K, dh), post-RoPE, for pool write-back after the step).
     """
     from repro.kernels.paged_attention.paged_attention import decode_attend
     cd = cfg.cdtype
@@ -301,7 +303,7 @@ def paged_attention_apply(p, x, cfg: ModelConfig, *, lengths, k_pages,
     kc = k.astype(cfg.kvdtype).astype(cd)
     vc = v.astype(cfg.kvdtype).astype(cd)
     o = decode_attend(q[:, 0], kc[:, 0], vc[:, 0], k_pages, v_pages,
-                      page_tables, lengths, layer=layer,
+                      page_tables, lengths, layer=layer, window=window,
                       interpret=interpret)
     out = jnp.einsum("bshk,hkd->bsd", o[:, None].astype(cd),
                      p["wo"].astype(cd))

@@ -124,6 +124,7 @@ def _block_apply(bp, x, cfg: ModelConfig, *, masks, positions,
             bp["attn"], h, cfg, lengths=paged["lengths"],
             k_pages=paged["k_pages"], v_pages=paged["v_pages"],
             page_tables=paged["page_tables"], layer=paged["layer"],
+            window=paged.get("window", 0),
             interpret=paged["interpret"])
     elif cfg.has_attention:
         mask = masks[0]
@@ -189,7 +190,16 @@ def _scan_blocks(stacked, x, cfg: ModelConfig, *, masks, positions,
     def body(carry, inp):
         xx, aux_acc = carry
         bp = inp["p"]
-        paged_l = dict(paged, layer=inp["li"]) if paged is not None else None
+        paged_l = None
+        if paged is not None:
+            paged_l = dict(paged, layer=inp["li"])
+            if cfg.sliding_window:
+                # per-layer global/window flag: global layers attend the
+                # whole cache (window 0), the rest apply the sliding
+                # window — one traced int32 rides the scan, so one
+                # compiled kernel serves a global_every hybrid
+                paged_l["window"] = jnp.where(
+                    inp["glob"], 0, cfg.sliding_window).astype(jnp.int32)
         out, new_kv, new_ssm, aux = _block_apply(
             bp, xx, cfg, masks=masks, positions=positions,
             kv=inp.get("kv"), cache_pos=cache_pos,
@@ -421,7 +431,8 @@ def dense_decode_step(params, cfg: ModelConfig, tokens, cache: Cache):
 
 
 def paged_decode_step(params, cfg: ModelConfig, tokens, k_pages, v_pages,
-                      page_tables, lengths, *, interpret: bool = True):
+                      page_tables, lengths, *, ssm_state=None,
+                      conv_state=None, interpret: bool = True):
     """One-token decode reading cached KV straight from the block pool via
     the Pallas ``paged_attention`` kernel — no gathered dense view.
 
@@ -429,20 +440,28 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, k_pages, v_pages,
     (L, P, page, K, dh) buffers; page_tables: (B, n_pages) int32;
     lengths: (B,) int32 ragged per-lane cached token counts.  One page
     table serves every layer (the pool's layer axis = one placement
-    decision per block id).
+    decision per block id).  Sliding-window configs run natively: the
+    scan flips the kernel's window mask per layer (``global_every``
+    hybrids keep their global layers unmasked).
 
-    Returns (logits (B, 1, V), k_new, v_new) with k_new/v_new
-    (L, B, 1, K, dh) — the in-flight token's per-layer K/V for the
-    caller's pool write-back (write-after-attend: the kernel never reads
-    a partially-written page).
+    Hybrid (attention + SSM) families thread their side state through the
+    scan: ``ssm_state`` (L, B, H, P, N) float32 and ``conv_state``
+    (L, B, k-1, ch) ride alongside the page operands — the PagedBackend
+    keeps them per-sequence next to the block tables.
+
+    Returns (logits (B, 1, V), k_new, v_new, ssm_new, conv_new) with
+    k_new/v_new (L, B, 1, K, dh) — the in-flight token's per-layer K/V
+    for the caller's pool write-back (write-after-attend: the kernel
+    never reads a partially-written page) — and ssm_new/conv_new the
+    advanced side state (None for attention-only families).
     """
-    assert cfg.has_attention and not cfg.has_ssm \
-        and cfg.family not in ("encdec", "vlm"), \
-        f"kernel-path decode pages attention KV only (family {cfg.family!r})"
-    if cfg.sliding_window:
-        raise NotImplementedError(
-            "kernel-path decode has no sliding-window masking yet; "
-            "use the gathered dense view (decode_mode='gather')")
+    assert cfg.has_attention and cfg.family not in ("encdec", "vlm"), \
+        f"kernel-path decode pages attention KV (+ SSM side state) only " \
+        f"(family {cfg.family!r})"
+    if cfg.has_ssm:
+        assert ssm_state is not None and conv_state is not None, \
+            "hybrid kernel-path decode needs ssm_state/conv_state"
+    ssm_states = (ssm_state, conv_state) if cfg.has_ssm else None
     B = tokens.shape[0]
     lengths = jnp.asarray(lengths, jnp.int32)
     positions = lengths[:, None]
@@ -455,24 +474,33 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, k_pages, v_pages,
     if nd:
         x, _, ys = _scan_blocks(params["blocks_dense"], x, cfg, masks=None,
                                 positions=positions, layer_offset=0, n=nd,
+                                ssm_states=jax.tree.map(
+                                    lambda a: a[:nd], ssm_states)
+                                if ssm_states else None,
                                 paged=paged)
         ys_all["dense"] = ys
     x, _, ys = _scan_blocks(params["blocks"], x, cfg, masks=None,
                             positions=positions, layer_offset=nd,
-                            n=cfg.n_layers - nd, paged=paged)
+                            n=cfg.n_layers - nd,
+                            ssm_states=jax.tree.map(
+                                lambda a: a[nd:], ssm_states)
+                            if ssm_states else None,
+                            paged=paged)
     ys_all["main"] = ys
 
     x = layers.apply_norm(params["final_norm"], x, cfg)
     logits = layers.lm_head(params["embed"], x, cfg)
 
-    def _cat(idx):
+    def _cat(name, idx):
         parts = []
-        if nd and "kv" in ys_all["dense"]:
-            parts.append(ys_all["dense"]["kv"][idx])
-        parts.append(ys_all["main"]["kv"][idx])
-        return jnp.concatenate(parts, 0)
+        if nd and name in ys_all["dense"]:
+            parts.append(ys_all["dense"][name][idx])
+        if name in ys_all["main"]:
+            parts.append(ys_all["main"][name][idx])
+        return jnp.concatenate(parts, 0) if parts else None
 
-    return logits, _cat(0), _cat(1)
+    return (logits, _cat("kv", 0), _cat("kv", 1),
+            _cat("ssm", 0), _cat("ssm", 1))
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache):

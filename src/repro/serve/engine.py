@@ -132,11 +132,8 @@ class ServeEngine:
             assert model.backend.pool is pool, \
                 "PagedLM backend must share the engine's pool"
             if use_kernel is not None:
-                # sliding-window configs stay on the gather path (the
-                # kernel has no window mask yet — same rule as the backend)
                 model.backend.decode_mode = \
-                    "kernel" if use_kernel and not model.cfg.sliding_window \
-                    else "gather"
+                    "kernel" if use_kernel else "gather"
             self.model = model
             self.cache = model.backend.prefix
             self.use_kernel = model.backend.decode_mode == "kernel"

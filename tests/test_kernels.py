@@ -132,20 +132,83 @@ def test_decode_attend_merges_inflight_token():
                                    rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("window", [1, 3, 8, 11, 100])
+def test_paged_attention_window_mask(window):
+    """Sliding-window kernel decode vs the windowed oracle: the query at
+    position ``lengths[b]`` sees only the last ``window`` positions.
+    Covers window == 1 (no cached key valid — the kernel must return the
+    empty state, not a saturated softmax) and window > length (inactive)."""
+    B, H, Hkv, D, page, npages = 3, 4, 2, 32, 8, 3
+    P = B * npages + 1
+    ks = jax.random.split(jax.random.key(12), 5)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (P, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (P, page, Hkv, D))
+    kn = jax.random.normal(ks[3], (B, Hkv, D))
+    vn = jax.random.normal(ks[4], (B, Hkv, D))
+    rng = np.random.default_rng(3)
+    pt = jnp.asarray(rng.permutation(P)[:B * npages].reshape(B, npages),
+                     jnp.int32)
+    lengths = jnp.asarray([2, 13, page * npages], jnp.int32)
+    full = decode_attend(q, kn, vn, kp, vp, pt, lengths, window=window,
+                         interpret=True)
+    ref = paged_decode_ref(q, kn, vn, kp, vp, pt, lengths, window=window)
+    assert np.isfinite(np.asarray(full)).all()
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    if window > page * npages:
+        # window wider than every cache: identical to the global mask
+        np.testing.assert_allclose(
+            np.asarray(full),
+            np.asarray(paged_decode_ref(q, kn, vn, kp, vp, pt, lengths)),
+            rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_window_per_layer_hybrid_layout():
+    """global_every hybrid layout: the same layered pool, window flipped
+    per layer (0 on global layers) — the traced-window kernel must match
+    the oracle on every plane."""
+    L, B, H, Hkv, D, page, npages = 4, 2, 4, 2, 32, 8, 2
+    ge, w = 2, 5                    # layers 0, 2 global; 1, 3 windowed
+    P = B * npages + 1
+    ks = jax.random.split(jax.random.key(13), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (L, P, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (L, P, page, Hkv, D))
+    rng = np.random.default_rng(4)
+    pt = jnp.asarray(rng.permutation(P)[:B * npages].reshape(B, npages),
+                     jnp.int32)
+    lengths = jnp.asarray([7, page * npages], jnp.int32)
+    for li in range(L):
+        wl = 0 if li % ge == 0 else w
+        out = paged_attention(q, kp, vp, pt, lengths, layer=li,
+                              window=jnp.asarray(wl, jnp.int32),
+                              interpret=True)
+        ref = paged_attention_ref(q, kp, vp, pt, lengths, layer=li,
+                                  window=wl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
 if st is not None:
-    @settings(max_examples=12, deadline=None)
+    @settings(max_examples=16, deadline=None)
     @given(st.integers(2, 3),            # layer count (>= 2: layered pool)
            st.integers(1, 3),            # batch lanes
            st.integers(1, 3),            # pages per sequence
            st.integers(1, 2),            # kv heads
            st.integers(1, 2),            # GQA repetition
+           st.integers(0, 25),           # sliding window (0 = global)
+           st.integers(0, 3),            # global_every (hybrid layout)
            st.integers(0, 1000),         # seed for ragged lengths
            )
-    def test_kernel_decode_property(L, B, npages, Hkv, n_rep, seed):
+    def test_kernel_decode_property(L, B, npages, Hkv, n_rep, window,
+                                    global_every, seed):
         """Property: kernel-path decode attention (paged_attention +
         in-flight merge) matches both the page-walk oracle and the dense
-        flat-softmax math across random ragged lengths, page counts and
-        layer counts."""
+        flat-softmax math across random ragged lengths, page counts,
+        layer counts, window sizes (incl. window == 1: no cached key
+        valid, and window > length: inactive) and ``global_every``
+        hybrid layouts (global layers decode unmasked)."""
         page, D = 8, 32
         H = Hkv * n_rep
         P = B * npages + 1
@@ -161,23 +224,30 @@ if st is not None:
         lengths = jnp.asarray(rng.integers(0, page * npages + 1, B),
                               jnp.int32)
         layer = int(rng.integers(L))
-        # cached-only attention is undefined over zero keys (softmax of an
-        # empty set) — clamp for this comparison; decode_attend below
-        # covers the true length-0 semantics (token attends itself)
-        ln1 = jnp.maximum(lengths, 1)
-        cached = paged_attention(q, kp, vp, pt, ln1, layer=layer,
-                                 interpret=True)
-        np.testing.assert_allclose(
-            np.asarray(cached),
-            np.asarray(paged_attention_ref(q, kp, vp, pt, ln1,
-                                           layer=layer)),
-            rtol=2e-4, atol=2e-4)
+        # the hybrid per-layer flag: global layers drop the window
+        is_global = bool(global_every) and layer % global_every == 0
+        wl = 0 if (is_global or not window) else window
+        if wl != 1:
+            # cached-only attention is undefined over zero valid keys
+            # (softmax of an empty set) — clamp length for this
+            # comparison (window 1 admits no cached key at any length;
+            # decode_attend below covers its true semantics: the token
+            # attends itself alone)
+            ln1 = jnp.maximum(lengths, 1)
+            cached = paged_attention(q, kp, vp, pt, ln1, layer=layer,
+                                     window=wl, interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(cached),
+                np.asarray(paged_attention_ref(q, kp, vp, pt, ln1,
+                                               layer=layer, window=wl)),
+                rtol=2e-4, atol=2e-4)
         full = decode_attend(q, kn, vn, kp, vp, pt, lengths, layer=layer,
-                             interpret=True)
+                             window=wl, interpret=True)
+        assert np.isfinite(np.asarray(full)).all()
         np.testing.assert_allclose(
             np.asarray(full),
             np.asarray(paged_decode_ref(q, kn, vn, kp, vp, pt, lengths,
-                                        layer=layer)),
+                                        layer=layer, window=wl)),
             rtol=2e-4, atol=2e-4)
 else:
     def test_kernel_decode_property():

@@ -121,13 +121,102 @@ def test_paged_decode_mode_selection():
                         decode_mode="gather").decode_mode == "gather"
     with pytest.raises(ValueError):
         PagedBackend(cfg, num_blocks=16, decode_mode="telepathic")
-    # sliding-window configs fall back to the gathered dense view (the
-    # kernel has no window mask yet) instead of mis-serving
+    # sliding-window configs stay on the kernel path — the kernel masks
+    # the window natively (per-layer flag for global_every hybrids)
     swin = dataclasses.replace(cfg, sliding_window=8)
-    assert PagedBackend(swin, num_blocks=16).decode_mode == "gather"
-    with pytest.raises(NotImplementedError):
-        lm.paged_decode_step({}, swin, jnp.zeros((1, 1), jnp.int32),
-                             None, None, None, jnp.zeros(1, jnp.int32))
+    assert PagedBackend(swin, num_blocks=16).decode_mode == "kernel"
+
+
+@pytest.mark.parametrize("decode_mode", ["gather", "kernel"])
+def test_dense_paged_parity_sliding_window(decode_mode):
+    """Pure-window config (starcoder2-style: every layer windowed): the
+    kernel's sliding-window mask must reproduce the dense backend's
+    window mask exactly — decoded past the window edge so the mask is
+    actually cutting keys."""
+    cfg, params = _model("starcoder2_7b", f32=decode_mode == "kernel")
+    cfg = dataclasses.replace(cfg, sliding_window=5)
+    params = lm.init(cfg, jax.random.key(0)).params
+    tokens = jax.random.randint(jax.random.key(11), (2, 9), 1, cfg.vocab)
+
+    dense = DenseBackend(cfg, batch=2, max_seq=24)
+    paged = PagedBackend(cfg, num_blocks=64, block_size=4,
+                         decode_mode=decode_mode)
+    assert paged.decode_mode == decode_mode
+    lg_d, _ = lm.prefill(params, cfg, tokens, backend=dense)
+    lg_p, _ = lm.prefill(params, cfg, tokens, backend=paged)
+    np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                               np.asarray(lg_p, np.float32),
+                               rtol=1e-4, atol=1e-4)
+    tok = jnp.argmax(lg_d[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(7):          # lengths reach 16 >> window 5
+        lg_d, _ = lm.decode_step(params, cfg, tok, dense)
+        lg_p, _ = lm.decode_step(params, cfg, tok, paged)
+        np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                                   np.asarray(lg_p, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+        a = np.argmax(np.asarray(lg_d[:, -1], np.float32), -1)
+        b = np.argmax(np.asarray(lg_p[:, -1], np.float32), -1)
+        assert (a == b).all()
+        tok = jnp.asarray(a, jnp.int32)[:, None]
+    paged.release()
+    paged.pool.check_invariants()
+
+
+@pytest.mark.parametrize("decode_mode", ["gather", "kernel"])
+def test_dense_paged_parity_hybrid_ssm_state(decode_mode):
+    """Hybrid (hymba: parallel attention+SSM heads, window + global_every
+    layers): PagedBackend pages the KV and carries the per-sequence
+    SSM/conv side state — logits must match the dense backend whose cache
+    pytree holds the same state."""
+    cfg, params = _model("hymba_1_5b", f32=decode_mode == "kernel")
+    # shrink the window below the decoded length so the mask really cuts
+    cfg = dataclasses.replace(cfg, sliding_window=6)
+    params = lm.init(cfg, jax.random.key(0)).params
+    assert cfg.has_ssm and cfg.sliding_window and cfg.global_every
+    # prompt length must be a multiple of the SSD chunk (smoke: 8)
+    tokens = jax.random.randint(jax.random.key(5), (2, 8), 1, cfg.vocab)
+
+    dense = DenseBackend(cfg, batch=2, max_seq=24)
+    paged = PagedBackend(cfg, num_blocks=64, block_size=4,
+                         decode_mode=decode_mode)
+    assert paged.decode_mode == decode_mode
+    lg_d, _ = lm.prefill(params, cfg, tokens, backend=dense)
+    lg_p, _ = lm.prefill(params, cfg, tokens, backend=paged)
+    np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                               np.asarray(lg_p, np.float32),
+                               rtol=1e-4, atol=1e-4)
+    tok = jnp.argmax(lg_d[:, -1], -1).astype(jnp.int32)[:, None]
+    for _ in range(7):
+        lg_d, _ = lm.decode_step(params, cfg, tok, dense)
+        lg_p, _ = lm.decode_step(params, cfg, tok, paged)
+        np.testing.assert_allclose(np.asarray(lg_d, np.float32),
+                                   np.asarray(lg_p, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+        a = np.argmax(np.asarray(lg_d[:, -1], np.float32), -1)
+        assert (a == np.argmax(np.asarray(lg_p[:, -1], np.float32),
+                               -1)).all()
+        tok = jnp.asarray(a, jnp.int32)[:, None]
+    paged.release()
+    paged.pool.check_invariants()
+    assert paged.pool.num_live == 0
+
+
+def test_hybrid_fork_copies_side_state():
+    """A forked hybrid sequence must own its SSM/conv state: diverging
+    forks advance independent recurrences (CoW shares only KV blocks)."""
+    cfg, params = _model("hymba_1_5b")
+    backend = PagedBackend(cfg, num_blocks=64, block_size=4,
+                           decode_mode="gather")
+    sid, _, _ = backend.new_seq(params, list(range(1, 9)))
+    fid = backend.fork_seq(sid)
+    s, f = backend._seqs[sid], backend._seqs[fid]
+    assert s.ssm is not None and f.ssm is not None
+    assert s.ssm is not f.ssm and np.array_equal(s.ssm, f.ssm)
+    backend.decode(params, [sid, fid], [7, 9])   # forks diverge
+    assert not np.array_equal(backend._seqs[sid].ssm,
+                              backend._seqs[fid].ssm)
+    backend.release()
+    backend.pool.check_invariants()
 
 
 def test_dense_backend_exposes_concrete_cache_reads():
@@ -189,6 +278,120 @@ def test_paged_ragged_decode_matches_isolated():
         lg1 = alone.decode(params, [s], [nxt])
         idx = 0 if nxt == 7 else 1
         np.testing.assert_allclose(lg[idx], lg1[0], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions: exhaustion rollback, released backends, dirty staging
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_rolls_back_partial_prefill():
+    """If ``table.extend`` exhausts the pool mid-prefill, the partial
+    table (prefix-matched increfed blocks + blocks allocated before the
+    failure) must be rolled back — nothing stays live, invariants hold,
+    and the error still surfaces."""
+    cfg, params = _model(ARCHS[0])
+    backend = PagedBackend(cfg, num_blocks=8, block_size=4,
+                           decode_mode="gather")
+    pool = backend.pool
+    # seed the prefix cache: a 20-token sequence fills 5 blocks, all
+    # registered; freeing it leaves them cached (evictable), none live
+    sid, _, _ = backend.new_seq(params, list(range(1, 21)))
+    backend.free_seq(sid)
+    assert pool.num_live == 0 and pool.num_cached == 5
+    live0, cached0 = pool.num_live, pool.num_cached
+    # same prefix + a tail that needs 10 blocks total > 8 in the pool:
+    # the prefix match revives 4 cached blocks, extension allocates a few
+    # more, then the pool runs out mid-extend
+    prompt = list(range(1, 17)) + list(range(100, 124))
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        backend.new_seq(params, prompt)
+    pool.check_invariants()
+    assert pool.num_live == live0, "partial prefill leaked live blocks"
+    assert pool.num_cached >= 1    # matched prefix blocks returned to cache
+    # the pool still serves: a fitting request succeeds afterwards
+    sid2, _, _ = backend.new_seq(params, list(range(1, 13)))
+    backend.free_seq(sid2)
+    pool.check_invariants()
+    assert pool.num_live == 0
+
+
+def test_pool_exhaustion_rolls_back_whole_batch():
+    """Batched prefill is atomic: rows added before the failing row are
+    freed too, so ``num_live`` returns to its pre-call value."""
+    cfg, params = _model(ARCHS[0])
+    backend = PagedBackend(cfg, num_blocks=6, block_size=4,
+                           decode_mode="gather", share_prefixes=False)
+    pool = backend.pool
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        # row 0 fits (3 blocks), row 1 wants 4 more of the remaining 3
+        backend._add_seqs(params, np.asarray(
+            [list(range(1, 13)) + [0, 0], list(range(20, 34))], np.int32))
+    pool.check_invariants()
+    assert pool.num_live == 0 and not backend._seqs
+
+
+def test_released_dense_backend_raises_clear_error():
+    cfg, params = _model(ARCHS[0])
+    be = DenseBackend(cfg, batch=1, max_seq=8)
+    tokens = jax.random.randint(jax.random.key(0), (1, 4), 1, cfg.vocab)
+    lm.prefill(params, cfg, tokens, backend=be)
+    be.release()
+    with pytest.raises(RuntimeError, match="released"):
+        be.decode_step(params, jnp.ones((1, 1), jnp.int32))
+    with pytest.raises(RuntimeError, match="released"):
+        be.prefill(params, tokens)
+    with pytest.raises(RuntimeError, match="released"):
+        _ = be.lengths
+    with pytest.raises(RuntimeError, match="released"):
+        _ = be.k            # concrete-Cache compatibility reads too
+
+
+def test_released_paged_backend_raises_clear_error():
+    cfg, params = _model(ARCHS[0])
+    be = PagedBackend(cfg, num_blocks=32, block_size=4)
+    tokens = jax.random.randint(jax.random.key(0), (1, 4), 1, cfg.vocab)
+    lm.prefill(params, cfg, tokens, backend=be)
+    be.release()
+    be.pool.check_invariants()
+    for fn in (lambda: be.decode_step(params, jnp.ones((1, 1), jnp.int32)),
+               lambda: be.prefill(params, tokens),
+               lambda: be.lengths,
+               lambda: be.new_seq(params, [1, 2, 3]),
+               lambda: be.fork_seq(0),
+               lambda: be.free_seq(0),
+               lambda: be.table(0)):
+        with pytest.raises(RuntimeError, match="released"):
+            fn()
+
+
+def test_decode_stages_only_dirty_blocks():
+    """Per-step staging must upload exactly the blocks written since the
+    previous step — not the whole pool (the first step pays the full
+    upload to build the device mirror)."""
+    cfg, params = _model(ARCHS[0])
+    backend = PagedBackend(cfg, num_blocks=64, block_size=4,
+                           share_prefixes=False)
+    pool = backend.pool
+    sid, _, _ = backend.new_seq(params, list(range(1, 10)))
+    backend.decode(params, [sid], [3])
+    assert backend.staged_blocks_last_step == pool.cfg.num_blocks
+    for tok in (5, 7, 9, 11):
+        dirty_expected = len(pool.dirty)
+        backend.decode(params, [sid], [tok])
+        assert backend.staged_blocks_last_step == dirty_expected == 1, \
+            "decode restaged more than the blocks written last step"
+    # a second sequence's prefill dirties its blocks; the next decode
+    # stages those plus the first lane's tail — still not the whole pool
+    sid2, _, _ = backend.new_seq(params, list(range(30, 45)))
+    dirty_expected = len(pool.dirty)
+    assert 1 < dirty_expected < pool.cfg.num_blocks
+    backend.decode(params, [sid, sid2], [2, 4])
+    assert backend.staged_blocks_last_step == dirty_expected
+    # the mirror converges to the host pool once pending writes stage
+    backend._staged_pages()
+    np.testing.assert_array_equal(np.asarray(backend._k_dev),
+                                  pool.k_pages)
+    backend.release()
 
 
 def test_paged_prefix_sharing_shares_storage():

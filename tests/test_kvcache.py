@@ -185,6 +185,15 @@ def test_kernel_path_row_hits_at_least_gather():
             kb.row_hit_rate(res["gather"]), placement
         assert res["kernel"].achieved_gbps >= \
             res["gather"].achieved_gbps * 0.99, placement
+    # sliding-window config: the kernel's window page gate shortens its
+    # walk (out-of-window pages never fetched) while the gather path
+    # still reads the whole table — the ordering must hold there too
+    res = kb.decode_path_comparison(placement="mars", window_tokens=64)
+    assert kb.row_hit_rate(res["kernel"]) >= kb.row_hit_rate(res["gather"])
+    full = kb.decode_path_comparison(placement="mars")
+    assert res["kernel"].n_requests < full["kernel"].n_requests, \
+        "window page gate did not shorten the kernel's address stream"
+    assert res["gather"].n_requests == full["gather"].n_requests
 
 
 def test_read_traces_accept_empty_batches():
