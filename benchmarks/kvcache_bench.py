@@ -21,6 +21,14 @@ bandwidth and row-buffer hit rate.  The kernel path never interleaves
 lanes, so its hit rate bounds the gather path's from above; this is the
 bandwidth MARS placement actually delivers to the attention kernel.
 
+Sharded section (``kvcache/placement/sharded/...``): the same churn
+schedule run through a mesh-sharded pool (``sharded_placement_comparison``)
+— sequences routed to the least-loaded shard, each shard's decode lanes
+traced and replayed through ``core/dram.simulate`` as its *own* memory
+device.  Per-device interleave is shallower than the single pool's, so
+shard-routed MARS row-hit bounds single-pool MARS which bounds naive;
+aggregate bandwidth sums across devices (the scale-out half).
+
 Eviction section (ROADMAP "online eviction tuning"): a skewed-prefix
 workload — request popularity Zipf-distributed over prompt prefixes —
 drives the prefix cache under memory pressure and reports the FIFO
@@ -34,11 +42,13 @@ import time
 
 import numpy as np
 
+import dataclasses
+
 from repro.core import dram
 from repro.core.reorder import mars_order
 from repro.core.streams import PAGE_SHIFT
 from repro.kernels.paged_attention import ops
-from repro.kvcache import BlockPool, PoolConfig
+from repro.kvcache import BlockPool, PoolConfig, ShardedBlockPool
 from repro.kvcache.prefix import BlockTable, PrefixCache
 
 
@@ -137,6 +147,97 @@ def decode_path_comparison(*, placement: str = "mars", n_live: int = 16,
         out["kernel"] = dram.simulate(ops.kv_read_trace_kernel(
             tables, window_tokens=window_tokens,
             block_size=pool.cfg.block_size))
+    return out
+
+
+@dataclasses.dataclass
+class ShardedDramResult:
+    """Aggregate of per-shard ``DramResult``s: every shard is its own
+    memory device serving only its shard's lanes, in parallel.  Row-hit
+    aggregates by summing CAS/ACT counts; bandwidth sums across devices
+    (S devices deliver S memory systems' worth — the scaling half of the
+    sharding story; the placement half is the row-hit rate)."""
+    n_requests: int
+    n_act: int
+    achieved_gbps: float
+    per_shard: list
+
+
+def _aggregate_shards(results) -> ShardedDramResult:
+    results = [r for r in results if r.n_requests > 0]
+    return ShardedDramResult(
+        n_requests=sum(r.n_requests for r in results),
+        n_act=sum(r.n_act for r in results),
+        achieved_gbps=float(sum(r.achieved_gbps for r in results)),
+        per_shard=results)
+
+
+def sharded_churned_pool(n_shards: int, *, num_blocks: int = 512,
+                         n_live: int = 16, churn_events: int = 400,
+                         seed: int = 0):
+    """Churn a mesh-sharded pool with the same arrival/finish schedule as
+    ``churned_pool`` (same rng draws), routing each arriving sequence to
+    the least-loaded shard; returns (spool, [(shard, table), ...])."""
+    rng = np.random.default_rng(seed)
+    spool = ShardedBlockPool(
+        PoolConfig(num_blocks=num_blocks, placement="mars"),
+        n_shards=n_shards)
+    live: list[tuple[int, BlockTable]] = []
+
+    def start_one():
+        s = min(range(n_shards),
+                key=lambda i: (spool.shards[i].num_live, i))
+        t = BlockTable()
+        for _ in range(int(rng.integers(2, 9))):
+            t.blocks.append(
+                spool.shards[s].alloc(1, hint_blocks=t.blocks)[0])
+        t.num_tokens = len(t.blocks) * spool.cfg.block_size
+        live.append((s, t))
+
+    for _ in range(churn_events):
+        if len(live) >= n_live or (live and rng.random() < 0.5):
+            s, t = live.pop(int(rng.integers(len(live))))
+            for b in t.blocks:
+                spool.shards[s].decref(b)
+        else:
+            start_one()
+    while len(live) > n_live:
+        s, t = live.pop(0)
+        for b in t.blocks:
+            spool.shards[s].decref(b)
+    while len(live) < n_live:
+        start_one()
+    spool.check_invariants()
+    return spool, live
+
+
+def sharded_placement_comparison(*, n_shards: int = 4, n_live: int = 16,
+                                 grant_beats: int = 2, churn_events: int = 600,
+                                 seed: int = 0) -> dict:
+    """Shard-routed MARS vs single-pool MARS vs naive, same churn trace.
+
+    The single pool serves the whole decode batch from one memory device,
+    so all ``n_live`` lanes interleave into one address stream.  The
+    sharded pool routes sequences to ``n_shards`` devices; each device
+    sees only its own lanes' interleave (shallower multi-stream merge)
+    with MARS row-group packing *within* the shard — the leading shard
+    coordinate of the placement key doing its job.  Expected ordering:
+    shard-routed MARS row-hit >= single-pool MARS >= naive.
+    """
+    out = {}
+    for placement in ("naive", "mars"):
+        _, tables = churned_pool(placement, n_live=n_live,
+                                 churn_events=churn_events, seed=seed)
+        out[f"single/{placement}"] = dram.simulate(
+            ops.kv_read_trace(tables, grant_beats=grant_beats))
+    spool, live = sharded_churned_pool(n_shards, n_live=n_live,
+                                       churn_events=churn_events, seed=seed)
+    per_shard = []
+    for s in range(n_shards):
+        tables_s = [t for sh, t in live if sh == s]
+        per_shard.append(dram.simulate(
+            ops.kv_read_trace(tables_s, grant_beats=grant_beats)))
+    out["sharded/mars"] = _aggregate_shards(per_shard)
     return out
 
 
@@ -242,6 +343,23 @@ def run(emit, smoke: bool = False) -> None:
          f"{r.achieved_gbps:.2f}GB/s")
     emit("kvcache/decode/kernel/mars/window64/rowhit", us,
          f"{100 * row_hit_rate(r):.2f}%")
+    # mesh-sharded placement: route streams to devices first, row-group-
+    # -pack within each — per-shard traces replayed through the DRAM
+    # model (each shard = its own memory device); shard-routed MARS
+    # row-hit must bound single-pool MARS which bounds naive
+    for i, n_shards in enumerate((2,) if smoke else (2, 4)):
+        t0 = time.perf_counter()
+        res = sharded_placement_comparison(n_shards=n_shards, n_live=16)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"kvcache/placement/sharded/rowhit/shards{n_shards}", us / 3,
+             f"{100 * row_hit_rate(res['sharded/mars']):.2f}%")
+        if i == 0:      # single-pool baselines are shard-count-independent
+            emit("kvcache/placement/sharded/rowhit/single-mars", us / 3,
+                 f"{100 * row_hit_rate(res['single/mars']):.2f}%")
+            emit("kvcache/placement/sharded/rowhit/single-naive", us / 3,
+                 f"{100 * row_hit_rate(res['single/naive']):.2f}%")
+        emit(f"kvcache/placement/sharded/gbps/shards{n_shards}", us / 3,
+             f"{res['sharded/mars'].achieved_gbps:.2f}GB/s")
     # FIFO vs LRU under skewed prefix popularity
     n_requests = 150 if smoke else 400
     for zipf_a in (0.8, 1.3):

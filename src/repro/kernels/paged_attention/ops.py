@@ -52,14 +52,25 @@ def pool_page_tables(tables: Sequence, pad_to: int | None = None,
     return pt, lengths
 
 
-def batch_lane_order(tables: Sequence, blocks_per_group: int) -> np.ndarray:
+def batch_lane_order(tables: Sequence, blocks_per_group: int,
+                     shard_ids: Sequence[int] | None = None) -> np.ndarray:
     """Permutation over batch lanes grouping tail blocks by row neighborhood
-    (first-arrival page order, FIFO within a page — ``mars_order``)."""
+    (first-arrival page order, FIFO within a page — ``mars_order``).
+
+    ``shard_ids`` (mesh-sharded pools): per-lane shard of the lane's pool
+    — block ids are shard-local, so the grouping key gets the leading
+    shard coordinate of ``placement.placement_key``; lanes on different
+    shards never share a neighborhood even when their local ids collide.
+    """
     if not tables:
         return np.zeros(0, np.int64)
     groups = np.asarray([
         row_group_of(t.blocks[-1], blocks_per_group) if t.blocks else -1
         for t in tables], np.int32)
+    if shard_ids is not None:
+        assert len(shard_ids) == len(tables)
+        span = int(groups.max()) + 2        # local groups live in [-1, max]
+        groups = np.asarray(shard_ids, np.int32) * span + groups
     return np.asarray(mars_order(groups))
 
 

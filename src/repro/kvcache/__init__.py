@@ -9,20 +9,28 @@ The serving analogue of the paper's memory system, one module per layer:
   prefix     ref-counted prefix sharing + copy-on-write block tables
   evict      reclaim of cached (refcount-0) blocks: first-arrival order
              (the PhyPageOrderQ policy) or LRU
+  sharded_pool  mesh-sharded pools: one ``BlockPool`` per device-mesh
+             shard, the shard coordinate leading the placement key;
+             admission routing by prefix-page affinity + shard load
   backend    the unified KV-backend API: ``KVBackend`` protocol with
-             ``DenseBackend`` (concrete per-layer cache) and
-             ``PagedBackend`` (block tables over a layered pool)
+             ``DenseBackend`` (concrete per-layer cache), ``PagedBackend``
+             (block tables over a layered pool) and
+             ``ShardedPagedBackend`` (one paged backend per pool shard)
 
 ``backend`` imports jax + the model stack; it is intentionally NOT
 re-exported here so the allocator modules stay importable numpy-only —
-use ``from repro.kvcache.backend import ...``.
+use ``from repro.kvcache.backend import ...``.  (``ShardedBlockPool``
+only touches jax when asked to discover its shard count from a mesh.)
 """
 from repro.kvcache.evict import EvictionPolicy
-from repro.kvcache.placement import PlacementPolicy, row_group_of
+from repro.kvcache.placement import PlacementPolicy, placement_key, \
+    row_group_of
 from repro.kvcache.pool import BlockPool, PoolConfig
 from repro.kvcache.prefix import BlockTable, PrefixCache
+from repro.kvcache.sharded_pool import ShardedBlockPool
 
 __all__ = [
     "BlockPool", "PoolConfig", "BlockTable", "PrefixCache",
-    "PlacementPolicy", "EvictionPolicy", "row_group_of",
+    "PlacementPolicy", "EvictionPolicy", "row_group_of", "placement_key",
+    "ShardedBlockPool",
 ]

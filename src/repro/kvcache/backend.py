@@ -18,6 +18,13 @@ K/V, ``decode_step`` advances every lane one token.  Two implementations:
                  SSM/conv decode state host-side next to the block tables
                  (forked with the sequence, freed with it).
 
+A third implementation scales the paged path across a device mesh:
+``ShardedPagedBackend`` drives a ``kvcache.sharded_pool
+.ShardedBlockPool`` with one complete ``PagedBackend`` per shard (own
+pool, prefix cache, device mirror, optionally own mesh device) — the
+kernel runs per shard over shard-local page tables, sequences never span
+shards, and the scheduler routes admissions so shared prefixes co-locate.
+
 Decode through the paged backend has two modes (``decode_mode``):
 
   "kernel"   the default: ``lm.paged_decode_step`` reads each layer's KV
@@ -72,22 +79,45 @@ class KVBackend(Protocol):
     cfg: ModelConfig
 
     def prefill(self, params, tokens, frontend_emb=None):
-        """Run a (B, S) prompt batch, storing all layers' K/V.
-        Returns last-position logits (B, 1, V)."""
+        """Run a prompt batch and store every layer's K/V.
+
+        Args:
+          params: the model parameter tree (``lm.init(cfg).params``).
+          tokens: (B, S) int32 prompt batch; replaces any lanes a prior
+            ``prefill`` stored (the batch-level API serves one fixed
+            batch at a time).
+          frontend_emb: precomputed modality embeddings for families with
+            frontends; backends that hold no frontend state reject it.
+        Returns:
+          last-position logits, shape (B, 1, V).
+        Invariant: after the call ``lengths[b] == S`` for every lane.
+        """
         ...
 
     def decode_step(self, params, tokens):
-        """Advance every lane one token.  tokens: (B, 1) int32 inputs.
-        Returns next-token logits (B, 1, V)."""
+        """Advance every prefill lane one token.
+
+        Args:
+          params: the model parameter tree.
+          tokens: (B, 1) int32 — lane ``b``'s next input token.
+        Returns:
+          next-token logits, shape (B, 1, V).
+        Invariant: each call appends exactly one cached position per lane
+        (``lengths`` increases by 1 elementwise); must follow ``prefill``.
+        """
         ...
 
     @property
     def lengths(self) -> np.ndarray:
-        """Per-lane cached token counts, int32 (B,)."""
+        """Per-lane cached token counts, int32 (B,) — what a position
+        index may address in the next ``decode_step``."""
         ...
 
     def release(self) -> None:
-        """Drop all storage (paged: decref blocks back to the pool)."""
+        """Drop all storage (paged: decref every block back to the pool —
+        registered prefix blocks stay evictable, private ones free).
+        Idempotence is not promised; every subsequent entry point raises
+        a clear "backend released" ``RuntimeError``."""
         ...
 
 
@@ -121,6 +151,9 @@ class DenseBackend:
     # -- backend API --------------------------------------------------------
 
     def prefill(self, params, tokens, frontend_emb=None):
+        """Dense prompt run: builds a fresh ``lm.Cache`` sized ``max_seq``
+        and fills positions [0, S).  tokens: (B, S) int32 with
+        B == ``self.batch``.  Returns last-position logits (B, 1, V)."""
         from repro.models import lm
         self._check_released()
         logits, self._cache = lm.dense_prefill(
@@ -128,6 +161,9 @@ class DenseBackend:
         return logits
 
     def decode_step(self, params, tokens):
+        """One dense decode step at slot ``length`` (jitted; the cache
+        pytree is threaded functionally).  tokens: (B, 1) int32.
+        Returns next-token logits (B, 1, V)."""
         self._check_released()
         logits, self._cache = _dense_decode(params, self.cfg, tokens,
                                             self._cache)
@@ -135,11 +171,14 @@ class DenseBackend:
 
     @property
     def lengths(self) -> np.ndarray:
+        """(B,) int32 — the dense cache keeps one shared scalar length
+        (all lanes advance in lockstep), broadcast to per-lane form."""
         self._check_released()
         ln = np.asarray(self._cache.length, np.int32)
         return np.broadcast_to(np.atleast_1d(ln), (self.batch,)).copy()
 
     def release(self) -> None:
+        """Drop the cache pytree; later reads raise "backend released"."""
         self._cache = None
 
     # -- concrete-Cache compatibility reads ---------------------------------
@@ -253,7 +292,26 @@ class PagedBackend:
                  *, num_blocks: int = 256, block_size: int = 16,
                  placement: str = "mars", eviction: str = "fifo",
                  share_prefixes: bool = True, decode_mode: str = "kernel",
-                 kernel_interpret: bool = True):
+                 kernel_interpret: bool = True, device=None):
+        """Build a paged backend over ``pool`` (or a fresh pool sized by
+        ``num_blocks``/``block_size`` matching the model config).
+
+        Args:
+          cfg: model config; must be an attention-bearing decoder-only
+            family (encoder-decoder / VLM state is not paged yet).
+          pool: existing layered ``BlockPool`` to share; its KV buffer
+            shape must match ``cfg`` (asserted).
+          placement/eviction: pool policies when building a fresh pool.
+          share_prefixes: storage-level prefix sharing via ``PrefixCache``.
+          decode_mode: "kernel" (Pallas paged_attention per layer, the
+            default) or "gather" (dense-view oracle).
+          kernel_interpret: run the Pallas kernel in interpret mode
+            (CPU/CI); pass False on real TPU.
+          device: jax device the staged KV mirror and decode operands are
+            committed to; ``None`` uses the default device.  A mesh-
+            sharded deployment (``ShardedPagedBackend``) gives each
+            shard's backend its own device.
+        """
         if not cfg.has_attention or cfg.enc_layers \
                 or cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
@@ -265,6 +323,7 @@ class PagedBackend:
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
         self.decode_mode = decode_mode
         self.kernel_interpret = kernel_interpret
+        self.device = device
         self.cfg = cfg
         if pool is None:
             pool = BlockPool(PoolConfig(
@@ -300,6 +359,13 @@ class PagedBackend:
 
     # -- device staging ------------------------------------------------------
 
+    def _put(self, x):
+        """Commit an operand to this backend's device (default device when
+        unset) — per-shard backends keep their mirrors and decode inputs
+        on their own mesh device."""
+        a = jnp.asarray(x)
+        return a if self.device is None else jax.device_put(a, self.device)
+
     def _staged_pages(self):
         """Stage the pool's host-mutated KV buffers to device, uploading
         only blocks written since the last call (full upload first time).
@@ -307,8 +373,8 @@ class PagedBackend:
         pool = self.pool
         if self._k_dev is None:
             pool.drain_dirty()           # full upload covers everything
-            self._k_dev = jnp.asarray(pool.k_pages)
-            self._v_dev = jnp.asarray(pool.v_pages)
+            self._k_dev = self._put(pool.k_pages)
+            self._v_dev = self._put(pool.v_pages)
             self.staged_blocks_last_step = pool.cfg.num_blocks
         else:
             dirty = pool.drain_dirty()
@@ -317,11 +383,11 @@ class PagedBackend:
                 # pad the id list to a power of two (repeating the last
                 # id) so the donated scatter compiles O(log) variants
                 pad = dirty + [dirty[-1]] * (_pow2(len(dirty)) - len(dirty))
-                idx = jnp.asarray(pad, jnp.int32)
+                idx = self._put(np.asarray(pad, np.int32))
                 self._k_dev = _scatter_blocks(
-                    self._k_dev, idx, jnp.asarray(pool.k_pages[:, pad]))
+                    self._k_dev, idx, self._put(pool.k_pages[:, pad]))
                 self._v_dev = _scatter_blocks(
-                    self._v_dev, idx, jnp.asarray(pool.v_pages[:, pad]))
+                    self._v_dev, idx, self._put(pool.v_pages[:, pad]))
         return self._k_dev, self._v_dev
 
     # -- sequence-level API (continuous batching) ---------------------------
@@ -329,8 +395,21 @@ class PagedBackend:
     def new_seq(self, params, prompt: Sequence[int],
                 on_alloc: Optional[Callable[[int, int], None]] = None
                 ) -> tuple[int, Any, int]:
-        """Prefill one sequence.  Returns (sid, last-position logits
-        (1, V), shared-prefix token count)."""
+        """Prefill one sequence into the pool.
+
+        Args:
+          params: model parameter tree.
+          prompt: token ids; the prompt's full-block prefix is matched
+            against the prefix cache first (matched blocks are referenced,
+            not re-stored).
+          on_alloc: callback ``(sid, n_fresh_blocks)`` fired once with the
+            number of blocks this prefill actually allocated (the engine
+            converts admission reservations into claims with it).
+        Returns:
+          (sid, last-position logits (V,) float32, shared-prefix tokens).
+        Invariant: atomic under pool exhaustion — on RuntimeError nothing
+        stays live (see ``_add_seqs``).
+        """
         logits, sids, shared = self._add_seqs(
             params, np.asarray([list(prompt)], np.int32), on_alloc)
         return sids[0], logits[0], shared[0]
@@ -407,8 +486,21 @@ class PagedBackend:
 
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
                on_alloc: Optional[Callable[[int, int], None]] = None):
-        """One ragged decode step: feed ``tokens[i]`` to sequence
-        ``sids[i]``, cache its K/V, return next-token logits (n, V)."""
+        """One ragged decode step over live sequences.
+
+        Args:
+          sids: sequences to advance (any subset of the live set, each at
+            its own length).
+          tokens: ``tokens[i]`` is fed to ``sids[i]``.
+          on_alloc: per-sequence callback ``(sid, n_fresh_blocks)`` — a
+            lane allocates at most one block per step (new tail or CoW).
+        Returns:
+          next-token logits, float32 (len(sids), V), row-aligned to sids.
+        Invariants: the new K/V is written back host-side *after* the
+        step (the kernel never reads a half-written page); a capacity
+        precheck makes the step all-or-nothing — on "pool exhausted"
+        every sequence is exactly as it was.
+        """
         self._check_released()
         assert sids, "no active sequences to decode (prefill first)"
         from repro.kernels.paged_attention import ops
@@ -438,17 +530,17 @@ class PagedBackend:
             for i, s in enumerate(seqs):
                 ssm_np[:, i] = s.ssm
                 conv_np[:, i] = s.conv
-            ssm = jnp.asarray(ssm_np)
-            conv = jnp.asarray(conv_np)
+            ssm = self._put(ssm_np)
+            conv = self._put(conv_np)
         if self.decode_mode == "kernel":
             logits, k_new, v_new, ssm_new, conv_new = _paged_decode_kernel(
-                params, self.cfg, jnp.asarray(toks), kp, vp,
-                jnp.asarray(pt), jnp.asarray(lengths), ssm, conv,
+                params, self.cfg, self._put(toks), kp, vp,
+                self._put(pt), self._put(lengths), ssm, conv,
                 interpret=self.kernel_interpret)
         else:
             logits, k_new, v_new, ssm_new, conv_new = _paged_decode(
-                params, self.cfg, jnp.asarray(toks), kp, vp,
-                jnp.asarray(pt), jnp.asarray(lengths), ssm, conv)
+                params, self.cfg, self._put(toks), kp, vp,
+                self._put(pt), self._put(lengths), ssm, conv)
         k_new = np.asarray(k_new)           # (L, Bp, 1, K, dh)
         v_new = np.asarray(v_new)
         if ssm_new is not None:
@@ -506,6 +598,9 @@ class PagedBackend:
     # -- batch-level KVBackend API ------------------------------------------
 
     def prefill(self, params, tokens, frontend_emb=None):
+        """Protocol ``prefill``: one new sequence per row of the (B, S)
+        batch, freeing any lanes a prior call created.  Returns
+        last-position logits (B, 1, V)."""
         self._check_released()
         assert frontend_emb is None, "paged backend has no frontend state"
         old, self._batch = self._batch, []
@@ -515,6 +610,9 @@ class PagedBackend:
         return jnp.asarray(logits)[:, None, :]
 
     def decode_step(self, params, tokens):
+        """Protocol ``decode_step``: advance the prefill lanes one token
+        (tokens (B, 1) int32, row order = prefill row order).  Returns
+        next-token logits (B, 1, V)."""
         self._check_released()
         toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
         logits = self.decode(params, self._batch, toks)
@@ -522,11 +620,16 @@ class PagedBackend:
 
     @property
     def lengths(self) -> np.ndarray:
+        """(B,) int32 cached token count per prefill lane — genuinely
+        ragged (unlike the dense backend's broadcast scalar)."""
         self._check_released()
         return np.asarray(
             [self._seqs[s].table.num_tokens for s in self._batch], np.int32)
 
     def release(self) -> None:
+        """Free every live sequence (registered prefix blocks stay as
+        evictable cache), drop the device mirror, and poison the backend:
+        all later entry points raise "backend released"."""
         for sid in list(self._seqs):
             self.free_seq(sid)
         self._batch = []
@@ -534,17 +637,327 @@ class PagedBackend:
         self._released = True
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded paged backend
+# ---------------------------------------------------------------------------
+
+class ShardedPagedBackend:
+    """One ``PagedBackend`` per shard of a ``ShardedBlockPool``.
+
+    Each shard owns a complete serving stack: its own block pool, prefix
+    cache, staged-dirty device mirror, and — when ``devices`` are given —
+    its own mesh device, so ``lm.paged_decode_step`` runs the kernel
+    **per shard over shard-local pools** (per-shard page tables; no
+    global block-id space exists).  A sequence lives entirely on one
+    shard: ``fork_seq`` forks within the parent's shard (CoW stays
+    shard-local) and prefix sharing only ever matches blocks the same
+    shard stored — which is why the scheduler routes shared prefixes to
+    one shard in the first place.
+
+    Sequence ids handed out here are backend-global; the mapping to
+    (shard, inner sid) is internal.  ``decode`` accepts any mix of
+    sequences, groups them by shard, runs one ragged kernel step per
+    shard, and reassembles logits in call order — so the engine's lane
+    loop is shard-agnostic.  The batch-level ``KVBackend`` API routes
+    prefill rows to the least-loaded shard, giving drop-in parity with
+    ``DenseBackend``/``PagedBackend``.
+    """
+
+    def __init__(self, cfg: ModelConfig, pool=None, *,
+                 n_shards: Optional[int] = None, mesh=None,
+                 devices: Optional[Sequence] = None,
+                 num_blocks: int = 256, block_size: int = 16,
+                 placement: str = "mars", eviction: str = "fifo", **kw):
+        """Args:
+          pool: a ``ShardedBlockPool`` to drive, or None to build one
+            (``num_blocks`` total across shards).
+          n_shards/mesh: shard-count discovery when building the pool —
+            forwarded to ``ShardedBlockPool`` (mesh model axis; 1
+            without a mesh).
+          devices: per-shard jax devices for the staged mirrors + decode
+            (length ``n_shards``; entries may repeat when fewer devices
+            than shards exist).  None keeps everything on the default
+            device — pool sharding still partitions placement.
+          num_blocks: total capacity request when building a pool; it is
+            rounded *up* to a multiple of the shard count, so any
+            capacity request is honored.
+          Remaining kwargs (decode_mode, kernel_interpret,
+          share_prefixes, ...) configure every per-shard backend alike.
+        """
+        from repro.kvcache.sharded_pool import ShardedBlockPool, \
+            discover_shards
+        if pool is None:
+            n_shards = discover_shards(n_shards, mesh)
+            num_blocks = -(-num_blocks // n_shards) * n_shards
+            pool = ShardedBlockPool(
+                PoolConfig(num_blocks=num_blocks, block_size=block_size,
+                           placement=placement, eviction=eviction,
+                           n_kv_heads=cfg.n_kv_heads, head_dim=cfg.d_head,
+                           n_layers=cfg.n_layers, dtype=str(cfg.kvdtype)),
+                n_shards=n_shards, mesh=mesh)
+        assert isinstance(pool, ShardedBlockPool), \
+            "ShardedPagedBackend needs a ShardedBlockPool"
+        if devices is not None:
+            assert len(devices) == pool.n_shards, \
+                (len(devices), pool.n_shards)
+        self.cfg = cfg
+        self.pool = pool
+        self.backends = [
+            PagedBackend(cfg, shard_pool,
+                         device=None if devices is None else devices[i],
+                         **kw)
+            for i, shard_pool in enumerate(pool.shards)]
+        self._seqs: dict[int, tuple[int, int]] = {}   # gsid -> (shard, isid)
+        self._rev: dict[tuple[int, int], int] = {}    # (shard, isid) -> gsid
+        self._next_sid = 0
+        self._batch: list[int] = []
+        self._released = False
+
+    def _check_released(self) -> None:
+        if self._released:
+            raise RuntimeError(
+                "ShardedPagedBackend released: release() returned every "
+                "block to its shard pool; build a new backend to serve "
+                "again")
+
+    # decode_mode / kernel staging reads mirror PagedBackend's so the
+    # engine's use_kernel override and the staging tests stay backend-
+    # -agnostic (setter fans out to every shard)
+
+    @property
+    def decode_mode(self) -> str:
+        return self.backends[0].decode_mode
+
+    @decode_mode.setter
+    def decode_mode(self, mode: str) -> None:
+        if mode not in ("kernel", "gather"):
+            raise ValueError(f"unknown decode_mode {mode!r}")
+        for b in self.backends:
+            b.decode_mode = mode
+
+    @property
+    def staged_blocks_last_step(self) -> int:
+        return sum(b.staged_blocks_last_step for b in self.backends)
+
+    # -- sequence-level API (what the serve engine drives) ------------------
+
+    def new_seq(self, params, prompt: Sequence[int],
+                on_alloc: Optional[Callable[[int, int], None]] = None,
+                shard: Optional[int] = None) -> tuple[int, Any, int]:
+        """Prefill one sequence on one shard.
+
+        Args:
+          shard: the routed shard (what ``MarsScheduler`` stamped on the
+            request via ``ShardedBlockPool.route``); None picks the
+            least-loaded shard (direct API use, no scheduler in front).
+        Returns/invariants: as ``PagedBackend.new_seq`` — additionally,
+        every block of the sequence lives in ``pool.shards[shard]``.
+        """
+        self._check_released()
+        if shard is None:
+            shard = self.pool.least_loaded()
+        assert 0 <= shard < self.pool.n_shards, shard
+        gsid = self._next_sid
+        self._next_sid += 1
+        cb = None if on_alloc is None else \
+            (lambda _isid, n: on_alloc(gsid, n))
+        isid, logits, shared = self.backends[shard].new_seq(
+            params, prompt, on_alloc=cb)
+        self._seqs[gsid] = (shard, isid)
+        self._rev[(shard, isid)] = gsid
+        return gsid, logits, shared
+
+    def fork_seq(self, sid: int) -> int:
+        """Fork within the parent's shard — CoW forks are shard-local by
+        construction (blocks of one pool cannot be referenced from
+        another)."""
+        self._check_released()
+        shard, isid = self._seqs[sid]
+        nisid = self.backends[shard].fork_seq(isid)
+        gsid = self._next_sid
+        self._next_sid += 1
+        self._seqs[gsid] = (shard, nisid)
+        self._rev[(shard, nisid)] = gsid
+        return gsid
+
+    def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
+               on_alloc: Optional[Callable[[int, int], None]] = None):
+        """One ragged decode round across shards: group ``sids`` by
+        shard, run one ``PagedBackend.decode`` (one kernel invocation
+        over that shard's pool) per shard, reassemble logits in call
+        order.  Returns float32 (len(sids), V) row-aligned to sids.
+
+        All-or-nothing across shards, like ``PagedBackend.decode`` is
+        within one: every shard's worst-case block need is prechecked
+        before ANY shard commits its write-back, so a "pool exhausted"
+        raise leaves every sequence — on every shard — exactly as it
+        was (no lane double-appends KV on a retry)."""
+        self._check_released()
+        assert sids, "no active sequences to decode (prefill first)"
+        by_shard: dict[int, list[int]] = {}
+        for i, s in enumerate(sids):
+            by_shard.setdefault(self._seqs[s][0], []).append(i)
+        # cross-shard capacity precheck (mirrors PagedBackend.decode's):
+        # each lane needs at most one fresh block — a new tail, or a CoW
+        # copy of a shared tail
+        page = self.pool.cfg.block_size
+        for shard, idxs in by_shard.items():
+            inner = self.backends[shard]
+            need = 0
+            for i in idxs:
+                t = inner._seqs[self._seqs[sids[i]][1]].table
+                fill = t.num_tokens % page
+                if fill == 0 or inner.pool.refcount[t.blocks[-1]] > 1:
+                    need += 1
+            if not inner.pool.can_alloc(need):
+                raise RuntimeError(
+                    f"pool exhausted on shard {shard}: decode step needs "
+                    f"{need} blocks, free {inner.pool.num_free}, "
+                    f"cached {inner.pool.num_cached}")
+        rows: dict[int, np.ndarray] = {}
+        for shard, idxs in sorted(by_shard.items()):
+            cb = None if on_alloc is None else \
+                (lambda isid, n, _s=shard:
+                 on_alloc(self._rev[(_s, isid)], n))
+            lg = self.backends[shard].decode(
+                params, [self._seqs[sids[i]][1] for i in idxs],
+                [tokens[i] for i in idxs], on_alloc=cb)
+            for j, i in enumerate(idxs):
+                rows[i] = lg[j]
+        return np.stack([rows[i] for i in range(len(sids))])
+
+    def free_seq(self, sid: int) -> None:
+        """Release a finished sequence back to its shard's pool."""
+        self._check_released()
+        shard, isid = self._seqs.pop(sid)
+        del self._rev[(shard, isid)]
+        self.backends[shard].free_seq(isid)
+
+    def table(self, sid: int) -> BlockTable:
+        self._check_released()
+        shard, isid = self._seqs[sid]
+        return self.backends[shard].table(isid)
+
+    def shard_of(self, sid: int) -> int:
+        """Shard a live sequence's blocks occupy — the leading coordinate
+        of its placement key (``placement.placement_key``)."""
+        self._check_released()
+        return self._seqs[sid][0]
+
+    # -- batch-level KVBackend API ------------------------------------------
+
+    def prefill(self, params, tokens, frontend_emb=None):
+        """Protocol ``prefill``: rows route greedily to the least-loaded
+        shard (load measured in blocks, each row charged its block need —
+        the batch API has no prefix pages to be affine to), then each
+        shard prefills its rows in one batched call.  Atomic across
+        shards like ``PagedBackend._add_seqs`` is within one: if a later
+        shard exhausts its pool, rows already prefilled on earlier shards
+        are freed before the error re-raises — nothing stays live.
+        Returns last-position logits (B, 1, V) in row order."""
+        self._check_released()
+        assert frontend_emb is None, "paged backend has no frontend state"
+        old, self._batch = self._batch, []
+        for sid in old:
+            self.free_seq(sid)
+        tokens = np.asarray(tokens)
+        B = tokens.shape[0]
+        # same unit as pool.load (blocks): a row stores S prompt tokens
+        row_blocks = -(-tokens.shape[1] // self.pool.cfg.block_size)
+        load = [self.pool.load(s) for s in range(self.pool.n_shards)]
+        plan: dict[int, list[int]] = {}
+        for i in range(B):
+            s = min(range(self.pool.n_shards),
+                    key=lambda x: (load[x], x))
+            plan.setdefault(s, []).append(i)
+            load[s] += row_blocks
+        out = np.zeros((B, self.cfg.vocab), np.float32)
+        gsids: dict[int, int] = {}
+        for shard, idxs in sorted(plan.items()):
+            try:
+                lg, isids, _ = self.backends[shard]._add_seqs(
+                    params, tokens[idxs])
+            except RuntimeError:
+                # the failing shard rolled itself back; free the rows
+                # earlier shards already created, then surface the error
+                for gsid in gsids.values():
+                    self.free_seq(gsid)
+                raise
+            for j, i in enumerate(idxs):
+                out[i] = lg[j]
+                gsid = self._next_sid
+                self._next_sid += 1
+                self._seqs[gsid] = (shard, isids[j])
+                self._rev[(shard, isids[j])] = gsid
+                gsids[i] = gsid
+        self._batch = [gsids[i] for i in range(B)]
+        return jnp.asarray(out)[:, None, :]
+
+    def decode_step(self, params, tokens):
+        """Protocol ``decode_step`` over the prefill lanes (see
+        ``PagedBackend.decode_step``); lanes decode on their own shards.
+        Returns next-token logits (B, 1, V)."""
+        self._check_released()
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        logits = self.decode(params, self._batch, toks)
+        return jnp.asarray(logits)[:, None, :]
+
+    @property
+    def lengths(self) -> np.ndarray:
+        """(B,) int32 cached token count per prefill lane."""
+        self._check_released()
+        return np.asarray([self.table(s).num_tokens for s in self._batch],
+                          np.int32)
+
+    def release(self) -> None:
+        """Release every shard backend; later entry points raise."""
+        for b in self.backends:
+            b.release()
+        self._seqs.clear()
+        self._rev.clear()
+        self._batch = []
+        self._released = True
+
+
 def make_backend(cfg: ModelConfig, kind: str = "dense", *,
                  batch: int = 1, max_seq: int = 0, enc_len: int = 0,
                  pool: Optional[BlockPool] = None, **kw) -> KVBackend:
-    """Backend registry: "dense" | "paged"."""
+    """Backend registry: "dense" | "paged" | "sharded-paged".
+
+    Args:
+      batch/max_seq: capacity request — dense allocates (B, max_seq)
+        directly; paged kinds size the pool to hold ``batch`` lanes of
+        ``max_seq`` tokens (+1 decode slot each) unless ``num_blocks`` or
+        an explicit ``pool`` overrides it.
+      pool: concrete storage to share (``BlockPool`` for "paged",
+        ``ShardedBlockPool`` for "sharded-paged").
+      Remaining kwargs forward to the backend constructor.
+    Returns: an object satisfying the ``KVBackend`` protocol.
+
+    >>> make_backend(None, "holographic")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown KV backend kind 'holographic'
+    """
     if kind == "dense":
         return DenseBackend(cfg, batch, max_seq, enc_len)
-    if kind == "paged":
-        if pool is None and "num_blocks" not in kw and max_seq:
-            # honor the caller's capacity request: room for `batch` lanes
-            # of max_seq tokens (+1 decode slot each)
-            bs = kw.get("block_size", 16)
-            kw["num_blocks"] = batch * (-(-(max_seq + 1) // bs))
-        return PagedBackend(cfg, pool, **kw)
+    if kind in ("paged", "sharded-paged"):
+        size_request = pool is None and "num_blocks" not in kw and max_seq
+        # honor the caller's capacity request: room for `batch` lanes of
+        # max_seq tokens (+1 decode slot each)
+        bs = kw.get("block_size", 16)
+        lane_blocks = -(-(max_seq + 1) // bs)
+        if kind == "paged":
+            if size_request:
+                kw["num_blocks"] = batch * lane_blocks
+            return PagedBackend(cfg, pool, **kw)
+        if size_request:
+            from repro.kvcache.sharded_pool import discover_shards
+            n = kw["n_shards"] = discover_shards(kw.get("n_shards"),
+                                                 kw.get("mesh"))
+            # a lane never spans shards, so splitting batch*lane_blocks
+            # evenly would under-size shards whenever n does not divide
+            # batch: every shard must hold its share of WHOLE lanes
+            kw["num_blocks"] = n * (-(-batch // n)) * lane_blocks
+        return ShardedPagedBackend(cfg, pool, **kw)
     raise ValueError(f"unknown KV backend kind {kind!r}")

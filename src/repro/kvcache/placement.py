@@ -25,6 +25,21 @@ def row_group_of(block_id: int, blocks_per_group: int) -> int:
     return block_id // blocks_per_group
 
 
+def placement_key(block_id: int, blocks_per_group: int,
+                  shard: int = 0) -> tuple[int, int, int]:
+    """Full MARS placement key of a block: ``(shard, row_group, block)``.
+
+    The **leading device/shard coordinate** orders placement decisions one
+    level above the bank+row-group key: with a mesh-sharded pool
+    (``kvcache.sharded_pool``) a stream is first routed to a memory
+    *device* (shard), then row-group-packed within it — block ids are
+    shard-local, so comparing keys across shards is only meaningful with
+    the shard coordinate in front.  Single-pool callers keep ``shard=0``
+    and the key degenerates to the PR-1 ``(group, block)`` order.
+    """
+    return (shard, row_group_of(block_id, blocks_per_group), block_id)
+
+
 class PlacementPolicy:
     """Chooses which free blocks an allocation gets.
 

@@ -27,6 +27,19 @@ Blocks move through three states::
 ``content`` carries an opaque per-block payload tag (the token tuple the
 block holds) used by prefix matching and by the soak tests to prove
 copy-on-write never mutates a shared block.
+
+A metadata-only pool (no KV buffer) is enough to watch the allocator
+life-cycle:
+
+>>> pool = BlockPool(PoolConfig(num_blocks=8, block_size=4))
+>>> a = pool.alloc(2)
+>>> pool.num_live, pool.num_free, pool.num_cached
+(2, 6, 0)
+>>> pool.decref(a[0])                 # free outright
+>>> pool.decref(a[1], cache=True)     # retain as evictable prefix storage
+>>> pool.num_live, pool.num_free, pool.num_cached
+(0, 7, 1)
+>>> pool.check_invariants()
 """
 from __future__ import annotations
 
@@ -129,18 +142,29 @@ class BlockPool:
         return int(self.used.sum()) - self.num_cached
 
     def can_alloc(self, n: int) -> bool:
+        """True iff ``alloc(n)`` would succeed right now (free blocks plus
+        cached blocks reclaimable by eviction); ignores reservations —
+        use ``can_reserve`` for admission decisions."""
         return self.num_free + self.num_cached >= n
 
     # -- admission reservations ---------------------------------------------
 
     def can_reserve(self, n: int) -> bool:
-        """Capacity check for admission: unreserved reclaimable blocks."""
+        """Admission capacity check: could ``n`` more blocks be promised
+        on top of every outstanding reservation?  (free + cached −
+        reserved ≥ n; cached counts because eviction reclaims it.)"""
         return self.num_free + self.num_cached - self.reserved >= n
 
     def reserve(self, n: int) -> None:
+        """Promise ``n`` blocks to admitted-but-not-yet-allocated work.
+        Reservations are bookkeeping only — they do not pin specific
+        blocks; the holder converts them into real allocations over the
+        sequence's lifetime and must ``unreserve`` the remainder."""
         self.reserved += n
 
     def unreserve(self, n: int) -> None:
+        """Release ``n`` previously reserved blocks (n ≤ reserved,
+        asserted).  Invariant: 0 ≤ reserved ≤ num_blocks always holds."""
         assert n <= self.reserved, (n, self.reserved)
         self.reserved -= n
 
@@ -148,9 +172,20 @@ class BlockPool:
 
     def alloc(self, n: int = 1,
               hint_blocks: Iterable[int] = ()) -> list[int]:
-        """Allocate ``n`` blocks (refcount 1), evicting cached blocks if the
-        free list is short.  ``hint_blocks``: blocks the requesting gang
-        already holds; MARS placement packs near their row groups."""
+        """Allocate ``n`` blocks at refcount 1.
+
+        Args:
+          n: block count; cached blocks are evicted (oldest-first per the
+            eviction policy) when the free list is short.
+          hint_blocks: blocks the requesting gang already holds — MARS
+            placement packs the new blocks into (or next to) the DRAM row
+            groups those occupy.
+        Returns:
+          the chosen block ids, placement-ordered.
+        Raises:
+          RuntimeError("pool exhausted ...") if free + cached < n; the
+          pool is unchanged in that case (the check precedes eviction).
+        """
         short = n - self.num_free
         if short > 0:
             if short > self.num_cached:
@@ -221,9 +256,16 @@ class BlockPool:
 
     def write_kv(self, bid: int, offset: int, k, v) -> None:
         """Write ``t`` token KV rows into a block at ``offset``, for every
-        layer plane at once.  k/v: (n_layers, t, n_kv_heads, head_dim);
-        a layerless (t, n_kv_heads, head_dim) is accepted when the pool has
-        a single layer plane (the PR-1 single-layer engine path)."""
+        layer plane at once, and mark the block dirty for staging.
+
+        Args:
+          bid: destination block (must be live; offset + t ≤ block_size,
+            asserted).
+          offset: first token slot written within the block.
+          k, v: (n_layers, t, n_kv_heads, head_dim) arrays; a layerless
+            (t, n_kv_heads, head_dim) is accepted when the pool has a
+            single layer plane (the PR-1 single-layer engine path).
+        """
         k, v = np.asarray(k), np.asarray(v)
         if k.ndim == 3:
             assert self.cfg.n_layers == 1, "layered pool needs layered KV"
@@ -244,8 +286,18 @@ class BlockPool:
         self.stats.cow_copies += 1
 
     def drain_dirty(self) -> list[int]:
-        """Block ids written since the last drain (sorted), clearing the
-        set — the device-mirror staging contract of ``PagedBackend``."""
+        """Block ids whose payload changed since the last drain (sorted),
+        clearing the set.
+
+        This is the dirty-block staging contract: the pool mutates its KV
+        buffers host-side in place (``write_kv``/``copy_block`` add to
+        ``dirty``); a **single consumer** — the owning backend's device
+        mirror — drains the set once per decode step and re-uploads
+        exactly those blocks instead of the whole pool.  Two consumers
+        would each see only a partial dirty stream and serve stale pages,
+        which is why a pool belongs to one backend (and, mesh-sharded,
+        each shard's pool to that shard's backend/mirror/device).
+        """
         out = sorted(self.dirty)
         self.dirty.clear()
         return out

@@ -8,6 +8,8 @@ device state (the dry-run must set XLA_FLAGS before first device init).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 
@@ -28,3 +30,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_local_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names (CPU tests)."""
     return jax.make_mesh((1, 1), ("data", "model"), **auto_axis_types(2))
+
+
+def request_cpu_devices(n: int) -> None:
+    """Ask XLA for ``n`` host CPU devices (the host-device CPU mesh the
+    sharded serve smoke runs on).  Must be called before the first jax
+    device use — backends already initialized ignore the flag, in which
+    case ``make_serve_mesh`` falls back to the devices that exist."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+
+
+def make_serve_mesh(n_shards: int) -> jax.sharding.Mesh:
+    """(1, n_shards) serving mesh, axes ("data", "model"): the model axis
+    is what ``ShardedBlockPool`` partitions the KV pool over.  When fewer
+    devices exist than requested (jax already initialized before
+    ``request_cpu_devices``), the mesh shrinks to what is available and
+    pool shards map onto devices round-robin."""
+    n = max(1, min(n_shards, jax.local_device_count()))
+    return jax.make_mesh((1, n), ("data", "model"), **auto_axis_types(2))

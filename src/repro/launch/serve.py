@@ -93,19 +93,44 @@ def main_paged(args):
     (``--no-kernel-decode``).  Sliding-window configs decode on the
     kernel path natively (per-layer window mask), and hybrid families
     (``--config hymba_1_5b``) carry their per-sequence SSM/conv state
-    through the backend.  Cross-checks a sample of served sequences
-    against the dense backend for end-to-end token parity."""
+    through the backend.  ``--shards N`` partitions the pool across a
+    host-device mesh (one pool + backend + staged mirror per shard,
+    admissions shard-routed by the scheduler).  Cross-checks a sample of
+    served sequences against the dense backend for end-to-end token
+    parity."""
     if args.toy:
         return main_paged_toy(args)
-    from repro.kvcache.backend import PagedBackend
+    from repro.kvcache.backend import PagedBackend, ShardedPagedBackend
     from repro.serve.engine import PagedLM, ServeEngine
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     assert cfg.n_layers > 1, "full-LM paged serving needs a multi-layer cfg"
     params = lm.init(cfg, jax.random.key(0)).params
-    backend = PagedBackend(
-        cfg, num_blocks=args.pool_blocks, block_size=16,
-        decode_mode="kernel" if args.kernel_decode else "gather")
+    decode_mode = "kernel" if args.kernel_decode else "gather"
+    if args.shards > 1:
+        # mesh-sharded serving: one block pool + paged backend per shard
+        # of the serving mesh's model axis, each shard's staged mirror
+        # committed to its own device (round-robin when the host exposes
+        # fewer devices than shards — see request_cpu_devices in main)
+        from repro.launch import mesh as mesh_mod
+        from repro.sharding import context as shctx
+        mesh = mesh_mod.make_serve_mesh(args.shards)
+        mesh_devices = list(mesh.devices.flat)
+        devices = [mesh_devices[s % len(mesh_devices)]
+                   for s in range(args.shards)]
+        with shctx.use_mesh(mesh):
+            pool_blocks = -(-args.pool_blocks // args.shards) * args.shards
+            backend = ShardedPagedBackend(
+                cfg, n_shards=args.shards, devices=devices,
+                num_blocks=pool_blocks, block_size=16,
+                decode_mode=decode_mode)
+        print(f"[serve --paged {cfg.name}] shards={args.shards} "
+              f"mesh_devices={len(mesh_devices)} "
+              f"blocks/shard={backend.pool.shard_blocks}")
+    else:
+        backend = PagedBackend(
+            cfg, num_blocks=args.pool_blocks, block_size=16,
+            decode_mode=decode_mode)
     pool = backend.pool
     sched = MarsScheduler(pool=pool)
     eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
@@ -117,8 +142,10 @@ def main_paged(args):
     finished = eng.run(reqs)
     dt = time.time() - t0
     pool.check_invariants()
+    shard_note = "" if args.shards <= 1 else \
+        f"shards={args.shards} shard_defers={sched.stats.shard_defers} "
     print(f"[serve --paged {cfg.name}] layers={cfg.n_layers} "
-          f"decode={backend.decode_mode} "
+          f"decode={backend.decode_mode} {shard_note}"
           f"served={len(finished)} steps={eng.stats.steps} "
           f"prefill_tokens={eng.stats.prefill_tokens} "
           f"decode_tokens={eng.stats.decode_tokens} "
@@ -175,10 +202,22 @@ def main(argv=None):
                          "--no-kernel-decode uses the gathered dense view")
     ap.add_argument("--toy", action="store_true",
                     help="with --paged: single-layer ToyModel engine demo")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="with --paged: partition the KV pool across this "
+                         "many mesh shards (per-shard pools, prefix-"
+                         "affinity admission routing, per-shard kernel "
+                         "decode); CPU runs force a host-device mesh")
     ap.add_argument("--pool-blocks", type=int, default=256)
     ap.add_argument("--parity-checks", type=int, default=4,
                     help="with --paged: served sequences re-checked densely")
     args = ap.parse_args(argv)
+
+    if args.shards > 1:
+        # must precede the first jax device use so the host can present a
+        # multi-device CPU mesh (no-op if the backend already initialized;
+        # make_serve_mesh then shrinks to the devices that exist)
+        from repro.launch.mesh import request_cpu_devices
+        request_cpu_devices(args.shards)
 
     if args.paged:
         return main_paged(args)

@@ -73,8 +73,8 @@ class PagedLM:
     """Real-LM engine driver: (params, cfg) served through a PagedBackend."""
 
     def __init__(self, params, cfg, backend):
-        from repro.kvcache.backend import PagedBackend
-        assert isinstance(backend, PagedBackend)
+        from repro.kvcache.backend import PagedBackend, ShardedPagedBackend
+        assert isinstance(backend, (PagedBackend, ShardedPagedBackend))
         self.params = params
         self.cfg = cfg
         self.backend = backend
@@ -127,6 +127,9 @@ class ServeEngine:
         ``None`` leaves the backend as configured (kernel by default)."""
         assert pool.k_pages is not None, "engine needs a pool with KV buffers"
         self.pool = pool
+        # mesh-sharded pools: reservations are per-routed-request and lane
+        # ordering carries the leading shard coordinate of the placement key
+        self._sharded = bool(getattr(pool, "is_sharded", False))
         self.scheduler = scheduler
         if isinstance(model, PagedLM):
             assert model.backend.pool is pool, \
@@ -135,9 +138,11 @@ class ServeEngine:
                 model.backend.decode_mode = \
                     "kernel" if use_kernel else "gather"
             self.model = model
-            self.cache = model.backend.prefix
+            self.cache = getattr(model.backend, "prefix", None)
             self.use_kernel = model.backend.decode_mode == "kernel"
         else:
+            assert not self._sharded, \
+                "sharded pools serve through PagedLM + ShardedPagedBackend"
             self.model = model or ToyModel(n_kv_heads=pool.cfg.n_kv_heads,
                                            head_dim=pool.cfg.head_dim)
             self.cache = PrefixCache(pool.cfg.block_size)
@@ -158,10 +163,20 @@ class ServeEngine:
     def _lm(self) -> Optional[PagedLM]:
         return self.model if isinstance(self.model, PagedLM) else None
 
+    def _unreserve(self, rid: int, n: int) -> None:
+        """Release ``n`` of a request's admission reservation — routed to
+        its shard for sharded pools (rid-keyed), aggregate otherwise."""
+        if n == 0:
+            return
+        if self._sharded:
+            self.pool.unreserve(n, rid=rid)
+        else:
+            self.pool.unreserve(n)
+
     def _claim(self, rid: int, n_allocs: int) -> None:
         take = min(self._claims.get(rid, 0), n_allocs)
         if take:
-            self.pool.unreserve(take)
+            self._unreserve(rid, take)
             self._claims[rid] -= take
 
     def _on_alloc(self, sid: int, n_allocs: int) -> None:
@@ -177,7 +192,7 @@ class ServeEngine:
         self._live_seqs[seq.rid] -= 1
         if self._live_seqs[seq.rid] == 0:
             del self._live_seqs[seq.rid]
-            self.pool.unreserve(self._claims.pop(seq.rid, 0))
+            self._unreserve(seq.rid, self._claims.pop(seq.rid, 0))
 
     # -- admission / prefill -------------------------------------------------
 
@@ -216,7 +231,12 @@ class ServeEngine:
     def _prefill_lm(self, req: Request, prompt: list) -> list[SeqState]:
         lm = self._lm
         allocs0 = self.pool.stats.allocs
-        sid, logits, shared = lm.backend.new_seq(lm.params, prompt)
+        kw = {}
+        if self._sharded:
+            # honor the scheduler's routing decision (prefix-page affinity
+            # + shard load); None falls back to the backend's own pick
+            kw["shard"] = getattr(req, "_shard", None)
+        sid, logits, shared = lm.backend.new_seq(lm.params, prompt, **kw)
         self._sid_rid[sid] = req.rid
         self._claim(req.rid, self.pool.stats.allocs - allocs0)
         self.stats.shared_prompt_tokens += shared
@@ -247,9 +267,15 @@ class ServeEngine:
         if not self.running:
             return 0
         # page-coherent lane order: tail blocks grouped by row neighborhood
+        # (leading shard coordinate first when the pool is mesh-sharded —
+        # block ids are shard-local, so cross-shard ids must not collide)
+        shard_ids = None
+        if self._sharded and self._lm is not None:
+            shard_ids = [self._lm.backend.shard_of(s.sid)
+                         for s in self.running]
         order = ops.batch_lane_order(
             [s.table for s in self.running],
-            self.pool.cfg.blocks_per_group)
+            self.pool.cfg.blocks_per_group, shard_ids=shard_ids)
         self.running = [self.running[i] for i in order]
 
         nxt = self._decode_lm() if self._lm is not None \

@@ -56,6 +56,7 @@ class SchedulerStats:
     page_switches: int = 0
     stall_rejects: int = 0
     pool_rejects: int = 0
+    shard_defers: int = 0    # sharded pool: no shard had headroom yet
     wait_sum: float = 0.0
 
     @property
@@ -123,6 +124,30 @@ class MarsScheduler:
             self.pool.reserve(req.blocks_needed(self.pool.cfg.block_size))
         return True
 
+    def _route_shard(self, r: Request) -> bool:
+        """Sharded pools only: commit ``r``'s aggregate admission
+        reservation to a concrete shard (``ShardedBlockPool.route`` —
+        prefix-page affinity first, then least shard load), stamping the
+        choice on ``r._shard`` for the engine to honor at prefill.
+
+        False = no shard has headroom *right now*; the request stays
+        buffered (its ``_seq`` keeps its drain priority) and scheduling
+        stops so the oldest request is never skipped — bounded delay is
+        preserved, admission just waits for running sequences to free
+        their shard.  Single pools always return True.
+        """
+        if self.pool is None or not getattr(self.pool, "is_sharded", False):
+            return True
+        if getattr(r, "_shard", None) is not None:
+            return True              # already routed (re-scheduled batch)
+        shard = self.pool.route(
+            r.rid, r.page, r.blocks_needed(self.pool.cfg.block_size))
+        if shard is None:
+            self.stats.shard_defers += 1
+            return False
+        r._shard = shard
+        return True
+
     def schedule_batch(self, batch_size: int, now: float | None = None,
                        cost_fn=None) -> list:
         """Forward (paper Fig 6): drain oldest pages to exhaustion.
@@ -130,13 +155,19 @@ class MarsScheduler:
         ``batch_size`` is a budget; each request costs ``cost_fn(r)``
         (default 1 — e.g. the engine charges one lane per forked sample).
         Scheduling stops before the first request that would overrun it.
+
+        With a sharded pool every admitted request is additionally routed
+        to a shard (``_route_shard``): page-grouped draining means the
+        whole page's requests land on one shard back-to-back — the
+        co-location that makes per-shard prefix caches hit.
         """
         now = time.time() if now is None else now
         cost_fn = cost_fn or (lambda r: 1)
         budget = batch_size
         out: list[Request] = []
         if not self.mars:
-            while self.fifo and cost_fn(self.fifo[0]) <= budget:
+            while self.fifo and cost_fn(self.fifo[0]) <= budget \
+                    and self._route_shard(self.fifo[0]):
                 r = self.fifo.popleft()
                 q = self.pages.get(r.page)
                 if q and r in q:
@@ -148,7 +179,8 @@ class MarsScheduler:
                     self.total -= 1
         else:
             last_page = None
-            while self.pages and budget > 0:
+            deferred = False
+            while self.pages and budget > 0 and not deferred:
                 # the page holding the oldest buffered request (the MARS
                 # forward rule, core/mars._forward) — unlike oldest-page-
                 # -allocation order, this bounds delay even when one hot
@@ -158,10 +190,15 @@ class MarsScheduler:
                 q = self.pages[page]
                 if cost_fn(q[0]) > budget:
                     break
+                if not self._route_shard(q[0]):
+                    break
                 if page != last_page:
                     self.stats.page_switches += 1
                     last_page = page
                 while q and cost_fn(q[0]) <= budget:
+                    if not self._route_shard(q[0]):
+                        deferred = True
+                        break
                     r = q.popleft()
                     try:
                         self.fifo.remove(r)

@@ -147,11 +147,36 @@ def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def cache_shardings(mesh, cfg, batch: int) -> Any:
+def pool_shard_count(mesh) -> int:
+    """How many shards a mesh gives the KV block pool: the size of the
+    model axis (one per-device pool per model shard —
+    ``kvcache.sharded_pool.ShardedBlockPool``); 1 without a mesh or when
+    the mesh has no model axis."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def cache_shardings(mesh, cfg, batch: int, backend: str = "dense") -> Any:
     """KV cache (L,B,S,K,dh): batch on data axes; kv heads on model when
     divisible, otherwise the *sequence* dim shards on model (flash-decoding
     style partial attention, resolved by GSPMD collectives).  SSM states
-    shard heads on model when divisible."""
+    shard heads on model when divisible.
+
+    Only the dense ``lm.Cache`` layout is covered (``backend="dense"``).
+    A paged backend's KV lives in a host-side ``BlockPool`` with layout
+    ``(L, num_blocks, page, K, dh)`` — handing these specs to it would
+    silently shard the *page* axis as if it were the sequence axis, so
+    any other ``backend`` raises: paged caches shard across the mesh via
+    ``kvcache.sharded_pool.ShardedBlockPool`` (per-shard pools driving
+    per-shard kernel calls), not via GSPMD cache specs.
+    """
+    if backend != "dense":
+        raise NotImplementedError(
+            f"cache_shardings covers the dense lm.Cache layout only; "
+            f"backend {backend!r} caches do not shard via GSPMD specs — "
+            f"use kvcache.sharded_pool.ShardedBlockPool (mesh-partitioned "
+            f"block pools) for paged serving")
     has_pod = "pod" in mesh.axis_names
     d = ("pod", "data") if has_pod else ("data",)
     nm = mesh.shape["model"]

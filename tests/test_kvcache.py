@@ -196,6 +196,26 @@ def test_kernel_path_row_hits_at_least_gather():
     assert res["gather"].n_requests == full["gather"].n_requests
 
 
+def test_sharded_placement_row_hits_at_least_single_pool():
+    """Acceptance (PR 5): routing streams to per-shard memory devices
+    before row-group packing must not lose locality — shard-routed MARS
+    row-hit >= single-pool MARS >= naive, on the same churn schedule."""
+    import benchmarks.kvcache_bench as kb
+    for n_shards in (2, 4):
+        res = kb.sharded_placement_comparison(n_shards=n_shards)
+        sharded = kb.row_hit_rate(res["sharded/mars"])
+        single = kb.row_hit_rate(res["single/mars"])
+        naive = kb.row_hit_rate(res["single/naive"])
+        assert sharded >= single >= naive, (n_shards, sharded, single, naive)
+        # every shard served a non-empty slice of the decode batch
+        assert len(res["sharded/mars"].per_shard) == n_shards
+        # the same lanes were served either way: the sharded churn replays
+        # the identical rng schedule, so the per-device traces exactly
+        # partition the single device's request stream
+        assert res["sharded/mars"].n_requests == \
+            res["single/mars"].n_requests
+
+
 def test_read_traces_accept_empty_batches():
     """A zero-sequence decode batch from an idle engine step must flow
     through trace -> reorder -> DRAM model without crashing (mirrors the

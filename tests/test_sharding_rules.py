@@ -89,3 +89,30 @@ def test_cache_shardings_kv_vs_seq():
     dsk = configs.get("deepseek_coder_33b")  # kv=8 doesn't -> seq sharding
     cs = rules.cache_shardings(mesh16, dsk, batch=128)
     assert cs.k.spec == P(None, ("data",), "model", None, None)
+
+
+def test_cache_shardings_rejects_non_dense_backends():
+    """Regression: the specs assume the dense (L,B,S,K,dh) lm.Cache
+    layout — a paged pool's (L,P,page,K,dh) buffer would silently
+    mis-shard its page axis as if it were the sequence axis, so any
+    non-dense backend must raise, pointing at ShardedBlockPool."""
+    from repro import configs
+    mesh16 = jax.sharding.Mesh(
+        np.array(jax.devices() * 256)[:256].reshape(16, 16),
+        ("data", "model"))
+    qwen = configs.get("qwen1_5_0_5b")
+    with pytest.raises(NotImplementedError, match="ShardedBlockPool"):
+        rules.cache_shardings(mesh16, qwen, batch=128, backend="paged")
+    # the dense default is untouched (dryrun.py call site)
+    assert rules.cache_shardings(mesh16, qwen, batch=128,
+                                 backend="dense").k is not None
+
+
+def test_pool_shard_count_uses_model_axis():
+    mesh16 = jax.sharding.Mesh(
+        np.array(jax.devices() * 16)[:16].reshape(1, 16),
+        ("data", "model"))
+    assert rules.pool_shard_count(mesh16) == 16
+    assert rules.pool_shard_count(None) == 1
+    no_model = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    assert rules.pool_shard_count(no_model) == 1

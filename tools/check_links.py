@@ -1,0 +1,66 @@
+"""Offline markdown link checker for the CI docs job.
+
+``python tools/check_links.py README.md docs/ARCHITECTURE.md ROADMAP.md``
+
+Checks two things, both resolvable without network access:
+
+  * relative markdown links ``[text](path)`` — the target file must
+    exist (resolved against the markdown file's directory; http(s) and
+    mailto links are skipped, fragments are stripped);
+  * backtick-quoted repo paths like ``src/repro/kvcache/pool.py`` — any
+    `...`-quoted token that contains a ``/`` and ends in a known source
+    extension must exist relative to the repo root, or (the docs'
+    shorthand convention) relative to ``src/repro/`` (keeps the
+    architecture doc's concept table honest as files move).
+
+Exits non-zero listing every broken reference.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODEPATH = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+"
+                      r"\.(?:py|md|json|yml|txt))(?:[:#][^`]*)?`")
+SKIP = re.compile(r"^(https?:|mailto:)")
+
+
+def check_file(path: str, root: str) -> list[str]:
+    text = open(path, encoding="utf-8").read()
+    bad = []
+    for m in LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if not target or SKIP.match(m.group(1)):
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            bad.append(f"{path}: broken link -> {m.group(1)}")
+    for m in CODEPATH.finditer(text):
+        candidates = (os.path.join(root, m.group(1)),
+                      os.path.join(root, "src", "repro", m.group(1)))
+        if not any(os.path.exists(c) for c in candidates):
+            bad.append(f"{path}: missing code path -> {m.group(1)}")
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = []
+    for path in argv or ["README.md"]:
+        if not os.path.exists(path):
+            failures.append(f"{path}: file not found")
+            continue
+        failures.extend(check_file(path, root))
+    for msg in failures:
+        print(f"[links] BROKEN {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"[links] ok: {len(argv)} file(s) checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
