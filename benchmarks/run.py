@@ -31,6 +31,18 @@ _BASELINE_DEFAULT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "bench_baseline.json")
 _REGRESSION_TOLERANCE = 0.10
+# per-key overrides of the default tolerance
+_TOLERANCES = {
+    # instrumented-vs-bare decode efficiency: 100 = metrics are free; the
+    # ISSUE gate is <5% overhead, so fail below 95
+    "kvcache/decode/obs/efficiency": 0.05,
+}
+# keys whose baseline is a definitional reference point, not a measured
+# snapshot — pinned so --update-baseline cannot drift the gate (wall-clock
+# ratios can exceed 100 by noise; the gate must stay "within 5% of free")
+_PINNED = {
+    "kvcache/decode/obs/efficiency": 100.0,
+}
 
 
 def _parse_value(derived: str):
@@ -40,17 +52,20 @@ def _parse_value(derived: str):
 
 
 def check_baseline(rows, baseline: dict) -> list[str]:
-    """Regressions (>10% below baseline) among the gated keys."""
+    """Regressions below baseline among the gated keys (default tolerance
+    10%; per-key overrides in ``_TOLERANCES``)."""
     current = {r["name"]: _parse_value(r["derived"]) for r in rows}
     failures = []
     for key, want in baseline.items():
         got = current.get(key)
+        tol = _TOLERANCES.get(key, _REGRESSION_TOLERANCE)
         if got is None:
             failures.append(f"{key}: missing from current run "
                             f"(baseline {want})")
-        elif want > 0 and got < want * (1 - _REGRESSION_TOLERANCE):
+        elif want > 0 and got < want * (1 - tol):
             failures.append(f"{key}: {got} vs baseline {want} "
-                            f"({100 * (got / want - 1):+.1f}%)")
+                            f"({100 * (got / want - 1):+.1f}%, "
+                            f"tolerance {100 * tol:.0f}%)")
     return failures
 
 
@@ -124,6 +139,9 @@ def main() -> None:
                 if _GATED.match(r["name"])
                 and _parse_value(r["derived"]) is not None}
         assert snap, "no gated rows emitted (did --only filter out kvcache?)"
+        for key, pin in _PINNED.items():
+            if key in snap:
+                snap[key] = pin
         with open(_BASELINE_DEFAULT, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
             f.write("\n")

@@ -101,6 +101,17 @@ def _decode(local: jnp.ndarray, cfg: DramConfig):
     return col, bank, row
 
 
+def decode_lines(local: np.ndarray, cfg: DramConfig):
+    """Public (col, bank, row) decode of channel-local line ids.
+
+    Pure arithmetic — works element-wise on numpy or jax arrays alike.
+    This is the exact map the FR-FCFS controller uses, exported so the
+    live open-row model in ``obs/rowsim.py`` shares it instead of
+    re-deriving the bank hash (one address map, one place).
+    """
+    return _decode(local, cfg)
+
+
 class _ChState(NamedTuple):
     win_local: jnp.ndarray   # int32[W] local line ids
     win_arr: jnp.ndarray     # int32[W] arrival order

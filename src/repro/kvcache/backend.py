@@ -345,6 +345,10 @@ class PagedBackend:
         self._next_sid = 0
         self._batch: list[int] = []      # batch-level API lane order
         self._released = False
+        # telemetry (obs.Observer.attach): spans + the live row-locality
+        # feed; obs_shard tags events with this backend's shard index
+        self.obs = None
+        self.obs_shard = 0
         # device mirror of the pool's KV buffers: decode re-stages only
         # blocks dirtied since the previous step (this backend is the
         # pool's single drain_dirty consumer)
@@ -388,6 +392,9 @@ class PagedBackend:
                     self._k_dev, idx, self._put(pool.k_pages[:, pad]))
                 self._v_dev = _scatter_blocks(
                     self._v_dev, idx, self._put(pool.v_pages[:, pad]))
+        if self.obs is not None:
+            self.obs.trace.event("backend.stage", shard=self.obs_shard,
+                                 blocks=self.staged_blocks_last_step)
         return self._k_dev, self._v_dev
 
     # -- sequence-level API (continuous batching) ---------------------------
@@ -425,6 +432,17 @@ class PagedBackend:
         nothing stays live.
         """
         self._check_released()
+        if self.obs is not None:
+            with self.obs.trace.span("backend.prefill",
+                                     shard=self.obs_shard,
+                                     rows=int(tokens.shape[0])) as sp:
+                out = self._add_seqs_impl(params, tokens, on_alloc)
+                sp["shared_tokens"] = int(sum(out[2]))
+                return out
+        return self._add_seqs_impl(params, tokens, on_alloc)
+
+    def _add_seqs_impl(self, params, tokens: np.ndarray,
+                       on_alloc=None) -> tuple[Any, list[int], list[int]]:
         B, S = tokens.shape
         logits, parts = _jit_prefill_parts(
             params, self.cfg, jnp.asarray(tokens, jnp.int32))
@@ -503,6 +521,16 @@ class PagedBackend:
         """
         self._check_released()
         assert sids, "no active sequences to decode (prefill first)"
+        if self.obs is not None:
+            with self.obs.trace.span("backend.decode",
+                                     shard=self.obs_shard,
+                                     lanes=len(sids)) as sp:
+                out = self._decode_impl(params, sids, tokens, on_alloc)
+                sp["staged"] = self.staged_blocks_last_step
+                return out
+        return self._decode_impl(params, sids, tokens, on_alloc)
+
+    def _decode_impl(self, params, sids, tokens, on_alloc=None):
         from repro.kernels.paged_attention import ops
         seqs = [self._seqs[s] for s in sids]
         B = len(seqs)
@@ -518,6 +546,16 @@ class PagedBackend:
         toks = np.zeros((Bp, 1), np.int32)
         toks[:B, 0] = list(tokens)
         kp, vp = self._staged_pages()
+        if self.obs is not None:
+            # live row-locality: this step's page walk in kernel issue
+            # order (sequence-major, page-contiguous — the MARS-reordered
+            # stream; defined the same way on the gather path so the
+            # gauge is mode-independent), fed to this shard's open-row
+            # model
+            self.obs.observe_kv_walk(
+                self.obs_shard,
+                ops.kv_read_trace_kernel([s.table for s in seqs],
+                                         block_size=page))
         ssm = conv = None
         if self.cfg.has_ssm:
             # batch the per-sequence hybrid side state (padded lanes get
@@ -862,9 +900,12 @@ class ShardedPagedBackend:
             self.free_seq(sid)
         tokens = np.asarray(tokens)
         B = tokens.shape[0]
-        # same unit as pool.load (blocks): a row stores S prompt tokens
+        # same unit as pool.load (blocks): a row stores S prompt tokens.
+        # Shard ranking comes from the shared load snapshot (the same
+        # numbers ShardedBlockPool.route and the obs gauges use).
+        from repro.obs.observer import shard_load_snapshot
         row_blocks = -(-tokens.shape[1] // self.pool.cfg.block_size)
-        load = [self.pool.load(s) for s in range(self.pool.n_shards)]
+        load = [r["load"] for r in shard_load_snapshot(self.pool)]
         plan: dict[int, list[int]] = {}
         for i in range(B):
             s = min(range(self.pool.n_shards),

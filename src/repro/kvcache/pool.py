@@ -49,7 +49,8 @@ from typing import Callable, Iterable, Optional
 import numpy as np
 
 from repro.kvcache.evict import EvictionPolicy
-from repro.kvcache.placement import PlacementPolicy
+from repro.kvcache.placement import PlacementPolicy, row_group_of
+from repro.obs.metrics import StatGroup
 
 # one block == one 4KB page of the DRAM model (64 x 64B lines)
 LINES_PER_BLOCK = 64
@@ -79,14 +80,14 @@ class PoolConfig:
     dtype: str = "float32"
 
 
-@dataclasses.dataclass
-class PoolStats:
-    allocs: int = 0
-    frees: int = 0
-    evictions: int = 0
-    cow_copies: int = 0
-    prefix_hits: int = 0
-    alloc_fails: int = 0
+class PoolStats(StatGroup):
+    """Allocator counters, now an ``obs.metrics.StatGroup`` facade: the
+    same attribute API the old dataclass had (``stats.allocs += n``),
+    but the fields are live ``Counter`` objects a ``MetricsRegistry``
+    adopts — the pool and the metrics snapshot share one copy of each
+    number."""
+    FIELDS = {"allocs": 0, "frees": 0, "evictions": 0, "cow_copies": 0,
+              "prefix_hits": 0, "alloc_fails": 0}
 
 
 class BlockPool:
@@ -113,6 +114,14 @@ class BlockPool:
         # over-commit the pool.
         self.reserved = 0
         self.stats = PoolStats()
+        # telemetry (obs.Observer.attach): None = uninstrumented; events
+        # carry obs_shard so sharded pools tag their shard index
+        self.obs = None
+        self.obs_shard = 0
+        # blocks whose allocator state changed since the last incremental
+        # invariant sweep (check_invariants(incremental=True)) — the
+        # O(dirty) working set the --paranoid serve mode validates
+        self._meta_dirty: set[int] = set()
         # KV payload: host-resident, mutated in place (a functional
         # .at[].set would copy the whole pool per token); staged to device
         # once per engine step when the kernel consumes it
@@ -161,12 +170,17 @@ class BlockPool:
         blocks; the holder converts them into real allocations over the
         sequence's lifetime and must ``unreserve`` the remainder."""
         self.reserved += n
+        if self.obs is not None:
+            self.obs.trace.event("pool.reserve", n=n, shard=self.obs_shard)
 
     def unreserve(self, n: int) -> None:
         """Release ``n`` previously reserved blocks (n ≤ reserved,
         asserted).  Invariant: 0 ≤ reserved ≤ num_blocks always holds."""
         assert n <= self.reserved, (n, self.reserved)
         self.reserved -= n
+        if self.obs is not None:
+            self.obs.trace.event("pool.unreserve", n=n,
+                                 shard=self.obs_shard)
 
     # -- alloc / ref / free -------------------------------------------------
 
@@ -190,6 +204,9 @@ class BlockPool:
         if short > 0:
             if short > self.num_cached:
                 self.stats.alloc_fails += 1
+                if self.obs is not None:
+                    self.obs.trace.event("pool.alloc_fail", n=n,
+                                         shard=self.obs_shard)
                 raise RuntimeError(
                     f"pool exhausted: want {n}, free {self.num_free}, "
                     f"cached {self.num_cached}")
@@ -205,6 +222,9 @@ class BlockPool:
             self.last_use[bid] = self._tick
             self.content[bid] = None
         self.stats.allocs += n
+        self._meta_dirty.update(out)
+        if self.obs is not None:
+            self.obs.trace.event("pool.alloc", n=n, shard=self.obs_shard)
         return out
 
     def incref(self, bid: int) -> None:
@@ -219,6 +239,7 @@ class BlockPool:
         if self.refcount[bid] == 0:
             if cache:
                 self._evictable[bid] = None
+                self._meta_dirty.add(bid)
             else:
                 self._free_block(bid)
 
@@ -230,6 +251,7 @@ class BlockPool:
         self._tick += 1
         self.last_use[bid] = self._tick
         self.stats.prefix_hits += 1
+        self._meta_dirty.add(bid)
 
     def touch(self, bid: int) -> None:
         self._tick += 1
@@ -241,6 +263,7 @@ class BlockPool:
         self.content[bid] = None
         self.placement.add_free(bid)
         self.stats.frees += 1
+        self._meta_dirty.add(bid)
 
     def _evict(self, n: int) -> None:
         victims = self.eviction.select(self._evictable, self.arrival,
@@ -251,6 +274,9 @@ class BlockPool:
                 self.on_evict(bid)
             self._free_block(bid)
             self.stats.evictions += 1
+        if victims and self.obs is not None:
+            self.obs.trace.event("pool.evict", n=len(victims),
+                                 shard=self.obs_shard)
 
     # -- KV payload ---------------------------------------------------------
 
@@ -284,6 +310,9 @@ class BlockPool:
             self.v_pages[:, dst] = self.v_pages[:, src]
             self.dirty.add(dst)
         self.stats.cow_copies += 1
+        if self.obs is not None:
+            self.obs.trace.event("pool.cow", src=src, dst=dst,
+                                 shard=self.obs_shard)
 
     def drain_dirty(self) -> list[int]:
         """Block ids whose payload changed since the last drain (sorted),
@@ -300,12 +329,27 @@ class BlockPool:
         """
         out = sorted(self.dirty)
         self.dirty.clear()
+        if out and self.obs is not None:
+            self.obs.trace.event("pool.drain_dirty", n=len(out),
+                                 shard=self.obs_shard)
         return out
 
     # -- invariants ---------------------------------------------------------
 
-    def check_invariants(self) -> None:
-        """Allocator ground truth; cheap enough to call inside soak loops."""
+    def check_invariants(self, incremental: bool = False) -> None:
+        """Allocator ground truth.
+
+        ``incremental=False`` is the exhaustive O(num_blocks) sweep the
+        tests run.  ``incremental=True`` validates only the blocks whose
+        allocator state changed since the previous incremental sweep
+        (``_meta_dirty`` — O(dirty), typically a handful of blocks per
+        engine step) plus O(1) aggregate counts, cheap enough for the
+        serving loop to run every N steps (``--metrics --paranoid``).
+        Both modes raise AssertionError on the first violation.
+        """
+        if incremental:
+            self._check_incremental()
+            return
         free = self.placement.free_ids()
         assert len(free) == len(set(free)), "free list holds duplicates"
         free_set = set(free)
@@ -327,3 +371,32 @@ class BlockPool:
             assert self.refcount[bid] > 0, f"live block {bid} has refcount 0"
         assert len(free_set) + len(cached) + len(live) == self.cfg.num_blocks
         assert 0 <= self.reserved <= self.cfg.num_blocks
+        self._meta_dirty.clear()   # full sweep subsumes the pending one
+
+    def _check_incremental(self) -> None:
+        """O(dirty) slice of the invariant sweep: aggregate accounting
+        plus per-block state for every block touched since the last
+        sweep.  Free-set membership is O(1) via the placement policy's
+        per-row-group free sets (kept in lockstep with the stack)."""
+        n = self.cfg.num_blocks
+        n_used = int(self.used.sum())
+        assert self.num_free + n_used == n, \
+            (self.num_free, n_used, "free/used partition lost blocks")
+        assert self.num_cached <= n_used, (self.num_cached, n_used)
+        assert 0 <= self.reserved <= n, self.reserved
+        bpg = self.placement.blocks_per_group
+        for bid in self._meta_dirty:
+            in_free = bid in \
+                self.placement._group_free[row_group_of(bid, bpg)]
+            if in_free:
+                assert not self.used[bid], f"block {bid} free AND used"
+                assert self.refcount[bid] == 0, bid
+            else:
+                assert self.used[bid], \
+                    f"block {bid} leaked (not free, not used)"
+                if bid in self._evictable:
+                    assert self.refcount[bid] == 0, bid
+                else:
+                    assert self.refcount[bid] > 0, \
+                        f"live block {bid} has refcount 0"
+        self._meta_dirty.clear()

@@ -64,6 +64,7 @@ import dataclasses
 from typing import Optional
 
 from repro.kvcache.pool import BlockPool, PoolConfig, PoolStats
+from repro.obs.observer import shard_load_snapshot
 
 # sticky page->shard affinity entries kept (LRU beyond this); bounds the
 # map under a stream of unique prompts while vastly exceeding any
@@ -130,6 +131,7 @@ class ShardedBlockPool:
         # (LRU-bounded at PAGE_AFFINITY_CAP — unlike the rid maps, pages
         # have no release event to clean up on)
         self._page_shard: dict[str, int] = {}
+        self.obs = None          # telemetry hook (obs.Observer.attach)
 
     # -- aggregate capacity (scheduler/engine-facing) -----------------------
 
@@ -154,10 +156,10 @@ class ShardedBlockPool:
     def stats(self) -> PoolStats:
         """Aggregated per-shard counters (a fresh snapshot per read)."""
         agg = PoolStats()
+        names = agg.fields()
         for s in self.shards:
-            for f in dataclasses.fields(PoolStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(s.stats, f.name))
+            for f in names:
+                setattr(agg, f, getattr(agg, f) + getattr(s.stats, f))
         return agg
 
     @property
@@ -206,11 +208,14 @@ class ShardedBlockPool:
         assert n <= self._pending, (n, self._pending)
         s = self._page_shard.get(page)
         if s is None or not self.shards[s].can_reserve(n):
-            fits = [i for i in range(self.n_shards)
-                    if self.shards[i].can_reserve(n)]
+            # rank shards off the shared load snapshot — same numbers the
+            # obs gauges publish (headroom == can_reserve, load == live +
+            # reserved), so routing and telemetry can never disagree
+            fits = [r for r in shard_load_snapshot(self)
+                    if r["headroom"] >= n]
             if not fits:
                 return None
-            s = min(fits, key=lambda i: (self.load(i), i))
+            s = min(fits, key=lambda r: (r["load"], r["shard"]))["shard"]
         self._pending -= n
         self.shards[s].reserve(n)
         # refresh LRU position, then trim the oldest entry past the cap
@@ -249,14 +254,18 @@ class ShardedBlockPool:
     def least_loaded(self) -> int:
         """Shard with the lowest load (ties -> lowest index); the routing
         fallback when no prefix-page affinity applies."""
-        return min(range(self.n_shards), key=lambda i: (self.load(i), i))
+        return min(shard_load_snapshot(self),
+                   key=lambda r: (r["load"], r["shard"]))["shard"]
 
     # -- invariants ----------------------------------------------------------
 
-    def check_invariants(self) -> None:
-        """Per-shard allocator ground truth plus reservation accounting."""
+    def check_invariants(self, incremental: bool = False) -> None:
+        """Per-shard allocator ground truth plus reservation accounting.
+        ``incremental`` forwards to each shard's O(dirty) sweep (the
+        cross-shard reservation accounting below is O(live rids) either
+        way)."""
         for s in self.shards:
-            s.check_invariants()
+            s.check_invariants(incremental=incremental)
         assert self._pending >= 0
         assert all(v > 0 for v in self._rid_reserved.values())
         assert set(self._rid_reserved) == set(self._rid_shard)

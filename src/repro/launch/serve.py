@@ -39,6 +39,40 @@ def synth_requests(n: int, vocab: int, n_prefixes: int = 8,
     return out
 
 
+def _attach_metrics(args, eng):
+    """--metrics: wire an ``obs.Observer`` through the engine (spans,
+    counters, live row-hit model; ``--paranoid`` adds the periodic
+    incremental invariant sweep).  None when telemetry is off."""
+    if not getattr(args, "metrics", False):
+        return None
+    from repro.obs import Observer
+    return Observer(paranoid=args.paranoid).attach(eng)
+
+
+def _dump_metrics(obs, args):
+    """Write ``<metrics-path>/metrics.json`` (registry snapshot) and
+    ``<metrics-path>/trace.jsonl`` (span/event log), then print the
+    one-screen summary table."""
+    if obs is None:
+        return
+    import json
+    import os
+    os.makedirs(args.metrics_path, exist_ok=True)
+    snap_path = os.path.join(args.metrics_path, "metrics.json")
+    trace_path = os.path.join(args.metrics_path, "trace.jsonl")
+    with open(snap_path, "w", encoding="utf-8") as fh:
+        json.dump(obs.snapshot(), fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    open(trace_path, "w").close()       # fresh file; flush() appends
+    n = obs.trace.flush(trace_path)
+    print("[metrics] " + "-" * 50)
+    for line in obs.summary_lines():
+        print(f"[metrics]   {line}")
+    print("[metrics] " + "-" * 50)
+    print(f"[metrics] snapshot -> {snap_path}")
+    print(f"[metrics] trace    -> {trace_path} ({n} events)")
+
+
 def main_paged_toy(args):
     """Continuous batching over the paged KV pool (``serve.engine``) with
     the deterministic single-layer ToyModel: admission bounded by pool
@@ -51,12 +85,14 @@ def main_paged_toy(args):
     sched = MarsScheduler(pool=pool)
     eng = ServeEngine(pool, sched, max_lanes=args.batch,
                       use_kernel=args.kernel_decode)
+    obs = _attach_metrics(args, eng)
     reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
                     prefix_len=r.prefix_len, max_new=args.new_tokens)
             for r in synth_requests(args.requests, vocab=128)]
     t0 = time.time()
     finished = eng.run(reqs)
     dt = time.time() - t0
+    _dump_metrics(obs, args)
     print(f"[serve --paged] served={len(finished)} steps={eng.stats.steps} "
           f"prefill_tokens={eng.stats.prefill_tokens} "
           f"decode_tokens={eng.stats.decode_tokens} "
@@ -135,6 +171,7 @@ def main_paged(args):
     sched = MarsScheduler(pool=pool)
     eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
                       max_lanes=args.batch)
+    obs = _attach_metrics(args, eng)
     reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
                     prefix_len=r.prefix_len, max_new=args.new_tokens)
             for r in synth_requests(args.requests, vocab=cfg.vocab)]
@@ -142,6 +179,7 @@ def main_paged(args):
     finished = eng.run(reqs)
     dt = time.time() - t0
     pool.check_invariants()
+    _dump_metrics(obs, args)
     shard_note = "" if args.shards <= 1 else \
         f"shards={args.shards} shard_defers={sched.stats.shard_defers} "
     print(f"[serve --paged {cfg.name}] layers={cfg.n_layers} "
@@ -210,6 +248,15 @@ def main(argv=None):
     ap.add_argument("--pool-blocks", type=int, default=256)
     ap.add_argument("--parity-checks", type=int, default=4,
                     help="with --paged: served sequences re-checked densely")
+    ap.add_argument("--metrics", action="store_true",
+                    help="with --paged: serve instrumented (obs.Observer) "
+                         "and dump a JSON metrics snapshot + JSONL span "
+                         "trace, plus a one-screen summary")
+    ap.add_argument("--metrics-path", default="metrics_out",
+                    help="directory for metrics.json / trace.jsonl")
+    ap.add_argument("--paranoid", action="store_true",
+                    help="with --metrics: run the pool's incremental "
+                         "invariant sweep every few engine steps")
     args = ap.parse_args(argv)
 
     if args.shards > 1:

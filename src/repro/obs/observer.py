@@ -1,0 +1,199 @@
+"""Observer: one attach point wiring the serving stack for telemetry.
+
+``Observer`` bundles the three obs primitives — a ``MetricsRegistry``, a
+``TraceLog``, and per-shard ``OpenRowCounter``s — and ``attach(engine)``
+threads it through every serving layer by setting each component's
+``obs`` attribute (scheduler, pool(s), backend(s), engine) and adopting
+their stats facades into the registry:
+
+    engine.<field>        EngineStats        (steps, decode_tokens, ...)
+    sched.<field>         SchedulerStats     (scheduled, shard_defers, ...)
+    pool.<field>          aggregate PoolStats
+    pool.shardN.<field>   per-shard PoolStats (sharded pools)
+
+Instrumented code pays ONE attribute test (``if self.obs is not None``)
+when telemetry is off — nothing else; see ``docs/OBSERVABILITY.md`` for
+the metric-name catalogue and span schema.
+
+``shard_load_snapshot`` is the single per-shard load/occupancy summary
+the routing layers consume (``ShardedBlockPool.route``/``least_loaded``
+and ``ShardedPagedBackend.prefill`` used to hand-roll their own): the
+``load`` and ``headroom`` columns are definitionally the pool's routing
+metric (live + reserved) and reservation headroom (free + cached −
+reserved), so every consumer ranks shards by the same numbers the
+gauges report.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.rowsim import OpenRowCounter
+from repro.obs.trace import TraceLog
+
+
+def shard_load_snapshot(pool, registry: Optional[MetricsRegistry] = None
+                        ) -> list:
+    """Per-shard load summary of a ``BlockPool`` or ``ShardedBlockPool``.
+
+    One row per shard (a single pool is one shard, index 0)::
+
+        {"shard": i, "blocks": capacity, "live": .., "cached": ..,
+         "free": .., "reserved": .., "load": live + reserved,
+         "headroom": free + cached - reserved,
+         "occupancy": (live + cached) / blocks}
+
+    ``load`` is the routing metric (``ShardedBlockPool.load``);
+    ``headroom`` is reservation capacity (``can_reserve(n)`` iff
+    ``headroom >= n``).  With ``registry``, each row is also published
+    as ``pool.shardN.{load,occupancy}`` gauges.
+    """
+    shards = pool.shards if getattr(pool, "is_sharded", False) else [pool]
+    out = []
+    for i, p in enumerate(shards):
+        blocks = p.cfg.num_blocks
+        live, cached, free = p.num_live, p.num_cached, p.num_free
+        row = {"shard": i, "blocks": blocks, "live": live,
+               "cached": cached, "free": free, "reserved": p.reserved,
+               "load": live + p.reserved,
+               "headroom": free + cached - p.reserved,
+               "occupancy": (live + cached) / blocks if blocks else 0.0}
+        if registry is not None:
+            registry.set(f"pool.shard{i}.load", row["load"])
+            registry.set(f"pool.shard{i}.occupancy", row["occupancy"])
+        out.append(row)
+    return out
+
+
+class Observer:
+    """Telemetry hub for one serving engine.
+
+    Args:
+      paranoid: run ``pool.check_invariants(incremental=True)`` every
+        ``paranoid_every`` engine steps (the ``--metrics --paranoid``
+        serve mode).
+      row_cfg: DRAM config for the live open-row model; ``None`` uses
+        the model's LPDDR4-3200 defaults.
+      clock/capacity: forwarded to ``TraceLog`` (tests inject a fake
+        clock for deterministic timelines).
+    """
+
+    def __init__(self, *, paranoid: bool = False, paranoid_every: int = 8,
+                 row_cfg=None, clock=None, capacity: int = 65536):
+        self.registry = MetricsRegistry()
+        self.trace = TraceLog(capacity=capacity, clock=clock)
+        self.paranoid = paranoid
+        self.paranoid_every = max(1, paranoid_every)
+        self._row_cfg = row_cfg
+        self.rows: dict[int, OpenRowCounter] = {}
+        self._engine = None
+
+    # -- wiring --------------------------------------------------------------
+
+    def attach(self, engine) -> "Observer":
+        """Wire a ``ServeEngine`` (and everything below it) to this
+        observer.  Idempotent; returns self for chaining."""
+        self._engine = engine
+        engine.obs = self
+        self.registry.adopt("engine", engine.stats)
+        engine.scheduler.obs = self
+        self.registry.adopt("sched", engine.scheduler.stats)
+        pool = engine.pool
+        if getattr(pool, "is_sharded", False):
+            pool.obs = self
+            for i, p in enumerate(pool.shards):
+                p.obs = self
+                p.obs_shard = i
+                self.registry.adopt(f"pool.shard{i}", p.stats)
+        else:
+            pool.obs = self
+            pool.obs_shard = 0
+            self.registry.adopt("pool", pool.stats)
+        backend = getattr(engine.model, "backend", None)
+        if backend is not None:
+            inners = getattr(backend, "backends", None) or [backend]
+            for i, b in enumerate(inners):
+                b.obs = self
+                b.obs_shard = i
+        return self
+
+    # -- live row-locality ---------------------------------------------------
+
+    def observe_kv_walk(self, shard: int, addrs) -> None:
+        """Feed one decode step's kernel page walk (64B-line ids from
+        ``ops.kv_read_trace_kernel``) into shard ``shard``'s open-row
+        model and refresh the row-hit gauges."""
+        rc = self.rows.get(shard)
+        if rc is None:
+            rc = self.rows[shard] = OpenRowCounter(self._row_cfg)
+        rc.observe(addrs)
+        self.registry.set(f"dram.shard{shard}.row_hit_pct",
+                          100.0 * rc.row_hit_rate)
+        hits = sum(r.hits for r in self.rows.values())
+        served = sum(r.served for r in self.rows.values())
+        self.registry.set("dram.row_hit_pct",
+                          100.0 * hits / served if served else 0.0)
+        self.registry.counter("dram.kv_lines").inc(
+            0 if addrs is None else len(addrs))
+
+    # -- per-step bookkeeping (called by the engine) -------------------------
+
+    def step_done(self, engine, dt_ms: float, lanes: int,
+                  tokens: int) -> None:
+        """End-of-step hook: step-latency histogram, occupancy/rate
+        gauges, and (paranoid mode) the periodic incremental invariant
+        sweep."""
+        self.registry.observe("engine.step_ms", dt_ms)
+        self.registry.set("engine.lanes", lanes)
+        self.sample(engine)
+        if self.paranoid and engine.stats.steps % self.paranoid_every == 0:
+            engine.pool.check_invariants(incremental=True)
+
+    def sample(self, engine) -> None:
+        """Refresh derived gauges from the engine's pools and stats."""
+        pool = engine.pool
+        snap = shard_load_snapshot(pool, self.registry)
+        blocks = sum(r["blocks"] for r in snap)
+        live = sum(r["live"] for r in snap)
+        cached = sum(r["cached"] for r in snap)
+        self.registry.set("pool.occupancy",
+                          (live + cached) / blocks if blocks else 0.0)
+        st = pool.stats
+        self.registry.set("kvcache.eviction_rate",
+                          st.evictions / max(st.allocs, 1))
+        es = engine.stats
+        self.registry.set("kvcache.prefix_hit_rate",
+                          es.shared_prompt_tokens / max(es.prefill_tokens, 1))
+
+    # -- surfacing -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """The registry snapshot plus trace/rowsim meta — what
+        ``launch/serve.py --metrics`` writes as JSON."""
+        out = self.registry.snapshot()
+        out["trace"] = {"events": self.trace.total,
+                        "dropped": self.trace.dropped}
+        return out
+
+    def summary_lines(self) -> list:
+        """One-screen human summary of the headline metrics."""
+        s = self.snapshot()
+        g, c, h = s["gauges"], s["counters"], s["histograms"]
+        step = h.get("engine.step_ms", {})
+        lines = [
+            f"row-hit %            {g.get('dram.row_hit_pct', 0.0):7.2f}",
+            f"prefix hit rate      {g.get('kvcache.prefix_hit_rate', 0.0):7.3f}",
+            f"eviction rate        {g.get('kvcache.eviction_rate', 0.0):7.3f}",
+            f"step latency ms      p50 {step.get('p50', 0.0):.3f} / "
+            f"p99 {step.get('p99', 0.0):.3f}  (n={step.get('count', 0)})",
+            f"steps / tokens       {c.get('engine.steps', 0)} / "
+            f"{c.get('engine.decode_tokens', 0)}",
+        ]
+        for name in sorted(n for n in g if n.endswith(".occupancy")
+                           and n.startswith("pool.shard")):
+            shard = name.split(".")[1]
+            lines.append(f"{shard + ' occupancy':<21}{g[name]:7.3f}")
+        lines.append(f"trace events         {s['trace']['events']} "
+                     f"({s['trace']['dropped']} dropped)")
+        return lines

@@ -30,6 +30,7 @@ Two model drivers:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Union
 
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ from repro.kernels.paged_attention import ops
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kvcache.pool import BlockPool
 from repro.kvcache.prefix import BlockTable, PrefixCache
+from repro.obs.metrics import StatGroup
 from repro.serving.scheduler import MarsScheduler, Request
 
 
@@ -108,13 +110,14 @@ class SeqState:
         return self.n_generated >= self.max_new
 
 
-@dataclasses.dataclass
-class EngineStats:
-    steps: int = 0
-    prefills: int = 0
-    prefill_tokens: int = 0      # prompt tokens run through prefill
-    decode_tokens: int = 0       # generated tokens
-    shared_prompt_tokens: int = 0
+class EngineStats(StatGroup):
+    """Engine counters as an ``obs.metrics.StatGroup`` facade (same
+    attribute API as the old dataclass; adopted live by the metrics
+    registry when an ``Observer`` is attached)."""
+    FIELDS = {"steps": 0, "prefills": 0,
+              "prefill_tokens": 0,        # prompt tokens run through prefill
+              "decode_tokens": 0,         # generated tokens
+              "shared_prompt_tokens": 0}
 
 
 class ServeEngine:
@@ -152,6 +155,7 @@ class ServeEngine:
         self.running: list[SeqState] = []
         self.finished: dict[int, list] = {}
         self.stats = EngineStats()
+        self.obs = None          # telemetry hook (obs.Observer.attach)
         # admission-reservation bookkeeping per request: every actual block
         # allocation converts one reserved block into a live one; leftovers
         # release when the request's last lane finishes
@@ -183,6 +187,9 @@ class ServeEngine:
         self._claim(self._sid_rid[sid], n_allocs)
 
     def _finish_seq(self, seq: SeqState) -> None:
+        if self.obs is not None:
+            self.obs.trace.event("engine.free", rid=seq.rid, sid=seq.sid,
+                                 tokens=seq.n_generated)
         self.finished.setdefault(seq.rid, []).append(seq.out_tokens)
         if self._lm is not None:
             self._lm.backend.free_seq(seq.sid)
@@ -201,6 +208,17 @@ class ServeEngine:
 
     def _prefill(self, req: Request) -> list[SeqState]:
         prompt = list(req.prompt)
+        if self.obs is not None:
+            shared0 = self.stats.shared_prompt_tokens
+            with self.obs.trace.span("engine.prefill", rid=req.rid,
+                                     tokens=len(prompt)) as sp:
+                seqs = self._prefill_impl(req, prompt)
+                sp["lanes"] = len(seqs)
+                sp["shared"] = self.stats.shared_prompt_tokens - shared0
+                return seqs
+        return self._prefill_impl(req, prompt)
+
+    def _prefill_impl(self, req: Request, prompt: list) -> list[SeqState]:
         self._claims[req.rid] = self._claims.get(req.rid, 0) \
             + req.blocks_needed(self.pool.cfg.block_size)
         self._live_seqs[req.rid] = self._live_seqs.get(req.rid, 0) \
@@ -258,11 +276,16 @@ class ServeEngine:
         queued."""
         if not self.running and not len(self.scheduler):
             return 0
+        obs = self.obs
+        t0 = time.perf_counter() if obs is not None else 0.0
         free = self.max_lanes - len(self.running)
         if free > 0:
             # a request occupies one decode lane per forked sample
             for req in self.scheduler.schedule_batch(
                     free, now=now, cost_fn=lambda r: r.n_samples):
+                if obs is not None:
+                    obs.trace.event("engine.admit", rid=req.rid,
+                                    n_samples=req.n_samples)
                 self.running.extend(self._prefill(req))
         if not self.running:
             return 0
@@ -283,11 +306,7 @@ class ServeEngine:
 
         still: list[SeqState] = []
         for seq, tok in zip(self.running, nxt):
-            tok = int(tok)
-            seq.tokens.append(tok)
-            seq.out_tokens.append(tok)
-            seq.n_generated += 1
-            self.stats.decode_tokens += 1
+            tok = self._commit_token(seq, int(tok))
             if seq.done:
                 self._finish_seq(seq)
             else:
@@ -303,9 +322,32 @@ class ServeEngine:
                 still.append(seq)
         self.running = still
         self.stats.steps += 1
+        if obs is not None:
+            obs.step_done(self, (time.perf_counter() - t0) * 1e3,
+                          lanes=len(nxt), tokens=len(nxt))
         return len(nxt)
 
+    def _commit_token(self, seq: SeqState, tok: int) -> int:
+        """The single decode-token commit path: every driver (toy and LM,
+        gather and kernel decode modes, forked lanes included) accounts
+        exactly one decode token per *sequence stepped* here — the
+        per-step/per-sequence split the stats regression tests pin."""
+        seq.tokens.append(tok)
+        seq.out_tokens.append(tok)
+        seq.n_generated += 1
+        self.stats.decode_tokens += 1
+        if self.obs is not None:
+            self.obs.trace.event("engine.token", rid=seq.rid, sid=seq.sid,
+                                 n=seq.n_generated)
+        return tok
+
     def _decode_toy(self) -> list:
+        if self.obs is not None:
+            # live row-locality: the kernel-order page walk for this step
+            # (the LM driver feeds the same walk inside backend.decode)
+            self.obs.observe_kv_walk(0, ops.kv_read_trace_kernel(
+                [s.table for s in self.running],
+                block_size=self.pool.cfg.block_size))
         pt, lengths = ops.pool_page_tables([s.table for s in self.running])
         q = self.model.q_for([s.tokens[-1] for s in self.running])
         # stage the host-mutated pool buffers to device once per step

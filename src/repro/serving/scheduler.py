@@ -27,6 +27,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.metrics import StatGroup
+
 
 @dataclasses.dataclass
 class Request:
@@ -49,15 +51,14 @@ class Request:
             * self.n_samples
 
 
-@dataclasses.dataclass
-class SchedulerStats:
-    scheduled: int = 0
-    batches: int = 0
-    page_switches: int = 0
-    stall_rejects: int = 0
-    pool_rejects: int = 0
-    shard_defers: int = 0    # sharded pool: no shard had headroom yet
-    wait_sum: float = 0.0
+class SchedulerStats(StatGroup):
+    """Scheduling counters as an ``obs.metrics.StatGroup`` facade (same
+    attribute API as the old dataclass; a ``MetricsRegistry`` adopts the
+    live counters).  The derived ratios stay plain properties."""
+    FIELDS = {"scheduled": 0, "batches": 0, "page_switches": 0,
+              "stall_rejects": 0, "pool_rejects": 0,
+              # sharded pool: no shard had headroom yet
+              "shard_defers": 0, "wait_sum": 0.0}
 
     @property
     def pages_per_batch(self) -> float:
@@ -92,27 +93,37 @@ class MarsScheduler:
         # allocated lazily, long after the batch was formed).
         self.pool = pool
         self._seq = 0                            # arrival counter
+        self.obs = None          # telemetry hook (obs.Observer.attach)
 
     def _set_of(self, page: str) -> int:
         return int(page, 16) % self.nsets
 
     def offer(self, req: Request) -> bool:
         """Insert (paper Fig 5).  False = backpressure to the client."""
+        ok, reason = self._offer(req)
+        if self.obs is not None:
+            self.obs.trace.event("sched.offer", rid=req.rid,
+                                 page=req.page, ok=ok, reason=reason)
+        return ok
+
+    def _offer(self, req: Request) -> tuple:
+        """(accepted, reason) — reason names the reject path ("ok",
+        "queue_full", "pool_capacity", "page_ways")."""
         if self.total >= self.request_q:
             self.stats.stall_rejects += 1
-            return False
+            return False, "queue_full"
         if self.pool is not None:
             if not self.pool.can_reserve(
                     req.blocks_needed(self.pool.cfg.block_size)):
                 self.stats.pool_rejects += 1
-                return False
+                return False, "pool_capacity"
         page = req.page
         if page not in self.pages:
             s = self._set_of(page)
             ways = self.setload.setdefault(s, set())
             if len(ways) >= self.ways:
                 self.stats.stall_rejects += 1
-                return False
+                return False, "page_ways"
             ways.add(page)
             self.pages[page] = deque()
         req._seq = self._seq            # arrival stamp: drain-order key
@@ -122,7 +133,7 @@ class MarsScheduler:
         self.total += 1
         if self.pool is not None:
             self.pool.reserve(req.blocks_needed(self.pool.cfg.block_size))
-        return True
+        return True, "ok"
 
     def _route_shard(self, r: Request) -> bool:
         """Sharded pools only: commit ``r``'s aggregate admission
@@ -144,8 +155,12 @@ class MarsScheduler:
             r.rid, r.page, r.blocks_needed(self.pool.cfg.block_size))
         if shard is None:
             self.stats.shard_defers += 1
+            if self.obs is not None:
+                self.obs.trace.event("sched.defer", rid=r.rid)
             return False
         r._shard = shard
+        if self.obs is not None:
+            self.obs.trace.event("sched.route", rid=r.rid, shard=shard)
         return True
 
     def schedule_batch(self, batch_size: int, now: float | None = None,

@@ -214,6 +214,21 @@ def test_stats_count_prefill_and_decode_tokens_separately():
     assert eng.stats.decode_tokens == 4 * 3
 
 
+def test_token_accounting_counts_forked_lanes_once_each():
+    """The commit-path contract: prompt tokens count once per *request*
+    (forks share the prefill), decode tokens once per *sequence stepped*
+    — so a 3-sample fork contributes 3x max_new decode tokens."""
+    reqs = [_req(0, _prefix(0) + (7, 8), max_new=4),
+            Request(rid=1, prompt=_prefix(1) + (9, 10), arrival=1e-3,
+                    prefix_len=4, max_new=4, n_samples=3)]
+    eng = _engine()
+    out = eng.run(reqs)
+    assert len(out[1]) == 3
+    assert eng.stats.prefills == 2
+    assert eng.stats.prefill_tokens == sum(len(r.prompt) for r in reqs)
+    assert eng.stats.decode_tokens == (1 + 3) * 4
+
+
 # ---------------------------------------------------------------------------
 # engine: real multi-layer LM through PagedBackend
 # ---------------------------------------------------------------------------
@@ -299,6 +314,30 @@ def test_engine_real_lm_forks_cow_and_diverge():
     assert eng.pool.stats.cow_copies > 0         # forked tails were CoW'd
     eng.pool.check_invariants()
     assert eng.pool.num_live == 0
+
+
+@pytest.mark.parametrize("decode_mode", ["gather", "kernel"])
+def test_token_accounting_identical_across_decode_modes(decode_mode):
+    """Regression pin for the prefill/decode token split: both decode
+    paths (dense gather and Pallas kernel), forks included, must account
+    exactly sum(prompts) prefill tokens and lanes x max_new decode
+    tokens — the single ``_commit_token`` path counts per sequence
+    stepped, never per batch or per backend call."""
+    eng, cfg, _ = _lm_engine(decode_mode=decode_mode)
+    rng = np.random.default_rng(7)
+    prompts = [tuple(int(t) for t in rng.integers(1, cfg.vocab, 10 + i))
+               for i in range(3)]
+    reqs = [Request(rid=i, prompt=p, arrival=i * 1e-3, prefix_len=8,
+                    max_new=4, n_samples=2 if i == 1 else 1)
+            for i, p in enumerate(prompts)]
+    out = eng.run(reqs)
+    assert sorted(out) == [0, 1, 2] and len(out[1]) == 2
+    lanes = sum(r.n_samples for r in reqs)
+    assert eng.stats.prefills == len(reqs)
+    assert eng.stats.prefill_tokens == sum(len(p) for p in prompts)
+    assert eng.stats.decode_tokens == lanes * 4
+    assert all(len(t) == 4 for lane in out.values() for t in lane)
+    eng.pool.check_invariants()
 
 
 def test_engine_backpressure_tiny_pool():

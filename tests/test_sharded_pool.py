@@ -253,26 +253,40 @@ def test_fork_stays_shard_local_and_cow_isolates():
 # soak: admit / fork / free with reservation routing
 # ---------------------------------------------------------------------------
 
-def test_sharded_soak_admit_fork_free_invariants():
+def test_sharded_soak_admit_fork_free_invariants(tmp_path):
     """Randomized admit (route + reserve + extend), fork (CoW), and free
     over a sharded metadata pool; every shard's allocator invariants and
-    the reservation accounting must hold throughout."""
+    the reservation accounting must hold throughout.  The soak runs fully
+    instrumented: every step is a trace span wrapping the shard pools'
+    alloc/evict/CoW events, the O(dirty) incremental sweep runs each
+    step, and the flushed trace must reconstruct cleanly."""
+    import json
+
+    from repro.obs import Observer
+
+    obs = Observer(paranoid=True)
     rng = np.random.default_rng(0)
     sp = _spool(num_blocks=64, n_shards=4, block_size=4)
+    sp.obs = obs
+    for i, p in enumerate(sp.shards):
+        p.obs = obs
+        p.obs_shard = i
+        obs.registry.adopt(f"pool.shard{i}", p.stats)
     live = []        # (rid, shard, table)
     next_rid = 0
-    for step in range(300):
+    def soak_step(step: int) -> None:
+        nonlocal next_rid
         r = rng.random()
         if r < 0.45 and len(live) < 12:
             n_tokens = int(rng.integers(1, 20))
             n_blocks = -(-n_tokens // 4)
             if not sp.can_reserve(n_blocks):
-                continue
+                return
             sp.reserve(n_blocks)
             shard = sp.route(next_rid, f"page{rng.integers(4)}", n_blocks)
             if shard is None:
                 sp.cancel_pending(n_blocks)   # give up instead of waiting
-                continue
+                return
             t = BlockTable()
             toks = [int(x) for x in rng.integers(0, 99, n_tokens)]
             t.extend(sp.shards[shard], toks, seq_tokens=toks)
@@ -289,6 +303,11 @@ def test_sharded_soak_admit_fork_free_invariants():
             rid, shard, t = live.pop(int(rng.integers(len(live))))
             for b in t.blocks:
                 sp.shards[shard].decref(b)
+
+    for step in range(300):
+        with obs.trace.span("soak.step", step=step):
+            soak_step(step)
+        sp.check_invariants(incremental=True)   # O(dirty), every step
         if step % 25 == 0:
             sp.check_invariants()
     for rid, shard, t in live:
@@ -296,6 +315,31 @@ def test_sharded_soak_admit_fork_free_invariants():
             sp.shards[shard].decref(b)
     sp.check_invariants()
     assert sp.num_live == 0 and sp.reserved == 0
+    # the adopted per-shard counters are the live stats objects
+    snap = obs.snapshot()
+    for i, p in enumerate(sp.shards):
+        for f in p.stats.fields():
+            assert snap["counters"][f"pool.shard{i}.{f}"] == \
+                getattr(p.stats, f)
+    assert sum(snap["counters"][f"pool.shard{i}.allocs"]
+               for i in range(sp.n_shards)) == sp.stats.allocs > 0
+    # spans wrapped every pool event: 300 step spans at depth 0, every
+    # other event stamped inside some step's [ts, ts+dur] window
+    evs = obs.trace.events()
+    steps = [e for e in evs if e["ev"] == "soak.step"]
+    assert len(steps) == 300
+    assert all(e["depth"] == 0 for e in steps)
+    spans = [(e["ts"], e["ts"] + e["dur_us"]) for e in steps]
+    for e in evs:
+        if e["ev"] != "soak.step":
+            assert any(lo <= e["ts"] <= hi for lo, hi in spans), e
+    # flush drains the ring to parseable JSONL
+    path = str(tmp_path / "soak_trace.jsonl")
+    n = obs.trace.flush(path)
+    assert n == len(evs) and obs.trace.events() == []
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) == n
+    assert sum(1 for e in lines if e["ev"] == "pool.alloc") > 0
 
 
 # ---------------------------------------------------------------------------

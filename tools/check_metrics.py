@@ -1,0 +1,151 @@
+"""Schema validator for ``launch/serve.py --metrics`` output (CI obs-smoke).
+
+``python tools/check_metrics.py metrics_out/metrics.json \
+        metrics_out/trace.jsonl``
+
+Checks, all offline:
+
+  * the snapshot is valid JSON with the three metric sections plus trace
+    meta, and the headline serving metrics exist with sane values:
+    ``dram.row_hit_pct`` in [0, 100], ``pool.shardN.occupancy`` in
+    [0, 1] for every shard, ``kvcache.prefix_hit_rate`` in [0, 1], and
+    an ``engine.step_ms`` histogram with count > 0 and p50 <= p99;
+  * counters are non-negative, and a served run actually counted work
+    (``engine.decode_tokens`` > 0);
+  * every trace line parses as one JSON event with integer ``ts`` and
+    string ``ev``, timestamps non-decreasing;
+  * at least one request's timeline reconstructs admit -> free: a rid
+    with ``sched.offer``, ``engine.admit``, ``engine.prefill``,
+    ``engine.token`` and ``engine.free`` events in timestamp order.
+
+Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# per-rid lifecycle, in required timeline order
+LIFECYCLE = ("sched.offer", "engine.admit", "engine.prefill",
+             "engine.token", "engine.free")
+
+
+def check_snapshot(snap: dict) -> list:
+    bad = []
+
+    def need(section: str, name: str):
+        v = snap.get(section, {}).get(name)
+        if v is None:
+            bad.append(f"snapshot: missing {section[:-1]} {name!r}")
+        return v
+
+    for section in ("counters", "gauges", "histograms", "trace"):
+        if section not in snap:
+            bad.append(f"snapshot: missing section {section!r}")
+    rh = need("gauges", "dram.row_hit_pct")
+    if rh is not None and not 0.0 <= rh <= 100.0:
+        bad.append(f"snapshot: dram.row_hit_pct out of range: {rh}")
+    for name in ("kvcache.prefix_hit_rate", "kvcache.eviction_rate"):
+        v = need("gauges", name)
+        if v is not None and not 0.0 <= v <= 1.0:
+            bad.append(f"snapshot: {name} out of range: {v}")
+    occ = [n for n in snap.get("gauges", {})
+           if n.startswith("pool.shard") and n.endswith(".occupancy")]
+    if not occ:
+        bad.append("snapshot: no pool.shardN.occupancy gauges")
+    for name in occ:
+        v = snap["gauges"][name]
+        if not 0.0 <= v <= 1.0:
+            bad.append(f"snapshot: {name} out of range: {v}")
+    hist = need("histograms", "engine.step_ms")
+    if hist is not None:
+        if hist.get("count", 0) <= 0:
+            bad.append("snapshot: engine.step_ms histogram is empty")
+        if hist.get("p50", 0.0) > hist.get("p99", 0.0):
+            bad.append(f"snapshot: engine.step_ms p50 {hist['p50']} > "
+                       f"p99 {hist['p99']}")
+    for name, v in snap.get("counters", {}).items():
+        if v < 0:
+            bad.append(f"snapshot: counter {name} is negative: {v}")
+    if snap.get("counters", {}).get("engine.decode_tokens", 0) <= 0:
+        bad.append("snapshot: engine.decode_tokens == 0 (nothing served?)")
+    return bad
+
+
+def check_trace(lines: list) -> list:
+    bad = []
+    events = []
+    last_ts = None
+    for i, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            bad.append(f"trace line {i}: not JSON ({e})")
+            continue
+        if not isinstance(ev.get("ts"), int) or ev["ts"] < 0:
+            bad.append(f"trace line {i}: bad ts {ev.get('ts')!r}")
+            continue
+        if not isinstance(ev.get("ev"), str):
+            bad.append(f"trace line {i}: bad ev {ev.get('ev')!r}")
+            continue
+        if last_ts is not None and ev["ts"] < last_ts:
+            bad.append(f"trace line {i}: ts went backwards "
+                       f"({last_ts} -> {ev['ts']})")
+        last_ts = ev["ts"]
+        events.append(ev)
+    if not events:
+        bad.append("trace: no events")
+        return bad
+    # one request must reconstruct its full admit->free timeline
+    by_rid: dict = {}
+    for ev in events:
+        if "rid" in ev:
+            by_rid.setdefault(ev["rid"], []).append(ev)
+    complete = 0
+    for rid, evs in by_rid.items():
+        stages = [min(e["ts"] for e in evs if e["ev"] == k)
+                  for k in LIFECYCLE
+                  if any(e["ev"] == k for e in evs)]
+        if len(stages) == len(LIFECYCLE) and stages == sorted(stages):
+            complete += 1
+    if complete == 0:
+        bad.append("trace: no rid reconstructs the full "
+                   f"{' -> '.join(LIFECYCLE)} timeline")
+    return bad
+
+
+def main(argv: list) -> int:
+    if len(argv) != 2:
+        print("usage: check_metrics.py <metrics.json> <trace.jsonl>",
+              file=sys.stderr)
+        return 2
+    snap_path, trace_path = argv
+    failures = []
+    try:
+        snap = json.load(open(snap_path, encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        failures.append(f"{snap_path}: unreadable ({e})")
+        snap = None
+    if snap is not None:
+        failures.extend(check_snapshot(snap))
+    try:
+        lines = open(trace_path, encoding="utf-8").readlines()
+    except OSError as e:
+        failures.append(f"{trace_path}: unreadable ({e})")
+        lines = None
+    if lines is not None:
+        failures.extend(check_trace(lines))
+    for msg in failures:
+        print(f"[metrics] BAD {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print(f"[metrics] ok: {snap_path} + {trace_path} "
+          f"({len(lines)} trace events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
