@@ -35,6 +35,23 @@ drives the prefix cache under memory pressure and reports the FIFO
 (PhyPageOrderQ first-arrival) vs LRU hit rates side by side.  FIFO evicts
 hot prefixes simply because they are old; LRU keeps them resident, so its
 hit rate should pull ahead as the skew sharpens.
+
+Tier section (``kvcache/tier/...``): the tiered KV memory layer
+(``kvcache.tiers``) at the tier boundary.  ``tiered_promotion_comparison``
+replays the *write* stream of one batched promotion copy-in through
+``core/dram.simulate`` twice — MARS-reordered by destination row group vs
+naive arrival order over the identical scattered destination set — the
+paper's source-side reorder applied to inter-tier traffic.
+``tiered_eviction_comparison`` runs the same deep/shallow prefix stream
+under cost-aware vs LRU eviction: cost mode spends evictions on blocks
+that are cheap to re-acquire (clean tier copy, shallow recompute) and
+keeps deep chains resident, so its token reuse pulls ahead and its
+recompute bill drops.
+
+Allocator soak section (``kvcache/alloc/...``): multi-round Zipf-sized
+alloc/free churn over ``BlockPool`` and ``ShardedBlockPool`` — long-run
+fragmentation (mean free-run length, live-table row-group locality) plus
+per-alloc wall latency in the us column.
 """
 from __future__ import annotations
 
@@ -340,6 +357,206 @@ def eviction_comparison(*, zipf_a: float = 1.1, n_prefixes: int = 48,
     return out
 
 
+def tiered_promotion_comparison(*, n_prefixes: int = 24,
+                                num_blocks: int = 64, block_size: int = 16,
+                                seed: int = 0) -> dict:
+    """{mode: DramResult} for the same batched promotion copy-in, written
+    MARS-reordered vs in arrival order.
+
+    Setup (identical under both modes, same rng): register
+    ``n_prefixes`` single-block prefixes, demote them all under pool
+    pressure, fragment the free list with a shuffled alloc/free pass so
+    promotion destinations scatter across row groups, then ``match`` all
+    prompts in one lookahead batch and ``flush_promotions``.  The flush's
+    destination order is replayed through ``core/dram.simulate`` as a
+    write stream — the only difference between the two runs is the copy
+    order (``TierManager(reorder=...)``), so the row-hit gap is the
+    reorder's contribution.
+    """
+    from repro.kvcache.tiers import TierManager
+    out = {}
+    for mode, reorder in (("mars", True), ("naive", False)):
+        rng = np.random.default_rng(seed)
+        pool = BlockPool(PoolConfig(num_blocks=num_blocks,
+                                    block_size=block_size,
+                                    placement="naive"))
+        cache = PrefixCache(block_size)
+        cache.attach(pool)
+        tiers = TierManager(pool, cache, reorder=reorder)
+        prompts = []
+        for i in range(n_prefixes):
+            prompt = [int(t) for t in rng.integers(1, 10_000, block_size)]
+            prompt.append(i + 1)           # tail token: prefix < prompt
+            t = BlockTable()
+            t.extend(pool, prompt, seq_tokens=prompt, cache=cache)
+            cache.release(t, pool)
+            prompts.append(prompt)
+        grab = pool.alloc(pool.num_free + pool.num_cached)  # demote all
+        assert tiers.stats.demotes == n_prefixes
+        for b in grab:
+            pool.decref(b)
+        # fragment: re-grab everything, free a shuffled half — the free
+        # list (= destination allocation order) now scatters across row
+        # groups exactly like a churned serving pool
+        grab = pool.alloc(num_blocks)
+        freed = rng.permutation(num_blocks)[:num_blocks // 2]
+        for i in freed:
+            pool.decref(grab[i])
+        for p in prompts:                  # one lookahead batch
+            tiers.match(p)
+        assert tiers.pending == n_prefixes
+        dsts = tiers.flush_promotions()
+        trace = TierManager.write_trace(dsts)
+        out[mode] = dram.simulate(trace, is_write=np.ones(len(trace), bool))
+    return out
+
+
+def tiered_eviction_comparison(*, n_deep: int = 6, deep_blocks: int = 4,
+                               n_shallow: int = 36, shallow_window: int = 12,
+                               rounds: int = 24, num_blocks: int = 36,
+                               block_size: int = 16, tier_blocks: int = 8,
+                               seed: int = 0) -> dict:
+    """Cost-aware vs LRU eviction over the same tiered prefix stream.
+
+    The stream mixes ``n_deep`` deep prefixes (``deep_blocks`` chained
+    blocks — a causal recompute reruns the whole chain) recurring every
+    round with a sliding window of shallow single-block prefixes, over a
+    pool well below the working set and a spill tier too small to hold
+    everyone (so some evictions genuinely drop).  Cost mode ranks victims
+    by re-acquisition cost and so protects the deep chains; LRU evicts by
+    recency and keeps the fresher shallow blocks instead.  Returns per
+    policy: ``reuse`` (matched / matchable prefix tokens, promoted blocks
+    included — higher is better) and ``recompute_tokens`` (the prefill
+    bill for what was lost).
+    """
+    from repro.kvcache.tiers import TierManager, TierSpec
+    rng = np.random.default_rng(seed)
+    deep = [tuple(int(t) for t in rng.integers(1, 10_000,
+                                               deep_blocks * block_size))
+            for _ in range(n_deep)]
+    shallow = [tuple(int(t) for t in rng.integers(1, 10_000, block_size))
+               for _ in range(n_shallow)]
+    schedule = []
+    for r in range(rounds):
+        for p in deep:
+            schedule.append(p + (9_000_000 + r,))      # unique tail
+        for j in range(shallow_window):
+            p = shallow[(r + j) % n_shallow]
+            schedule.append(p + (9_500_000 + r,))
+    out = {}
+    for policy in ("cost", "lru"):
+        pool = BlockPool(PoolConfig(num_blocks=num_blocks,
+                                    block_size=block_size,
+                                    eviction=policy))
+        cache = PrefixCache(block_size)
+        cache.attach(pool)
+        tiers = TierManager(pool, cache,
+                            specs=(TierSpec("host", tier_blocks,
+                                            latency_us=5.0, gbps=20.0),))
+        hits = possible = 0
+        for prompt in schedule:
+            prompt = list(prompt)
+            bids, n = tiers.match(prompt)
+            table = BlockTable(list(bids), n)
+            table.extend(pool, prompt[n:], seq_tokens=prompt, cache=cache)
+            tiers.flush_promotions()
+            hits += n
+            possible += len(prompt) - 1    # all full blocks are matchable
+            cache.release(table, pool)
+        pool.check_invariants()
+        tiers.check()
+        out[policy] = {"reuse": hits / possible,
+                       "recompute_tokens": possible - hits,
+                       "promoted_tokens": tiers.stats.promoted_tokens,
+                       "drops": tiers.stats.drops}
+    return out
+
+
+def alloc_soak(kind: str = "single", *, num_blocks: int = 256,
+               events: int = 2000, n_live_cap: int = 48,
+               n_shards: int = 2, seed: int = 0) -> dict:
+    """Multi-round Zipf-sized alloc/free soak over one pool (or a
+    mesh-sharded pool, least-loaded routing) — the allocator's long-run
+    behaviour under realistic churn.
+
+    Sequence sizes are Zipf-distributed (many short, a heavy tail of
+    long), frees are random, and the pool runs near capacity, so the free
+    list scatters the way a serving pool's does.  Reports:
+
+      ``locality``      mean over live tables of the fraction of blocks
+                        in the table's modal row group (MARS placement's
+                        long-run survival under fragmentation pressure)
+      ``free_run``      mean contiguous free-block run length (classic
+                        external-fragmentation measure; higher = less
+                        fragmented)
+      ``alloc_us``      mean wall microseconds per alloc() call
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "single":
+        pools = [BlockPool(PoolConfig(num_blocks=num_blocks,
+                                      placement="mars"))]
+        route = lambda: 0
+    else:
+        spool = ShardedBlockPool(
+            PoolConfig(num_blocks=num_blocks, placement="mars"),
+            n_shards=n_shards)
+        pools = spool.shards
+        route = lambda: min(range(n_shards),
+                            key=lambda i: (pools[i].num_live, i))
+    live: list[tuple[int, BlockTable]] = []
+    alloc_s = 0.0
+    n_allocs = 0
+
+    def start_one():
+        nonlocal alloc_s, n_allocs
+        z = int(min(8, rng.zipf(1.5)))
+        s = route()
+        if pools[s].num_free + pools[s].num_cached < z:
+            return False
+        t = BlockTable()
+        for _ in range(z):
+            t0 = time.perf_counter()
+            t.blocks.append(pools[s].alloc(1, hint_blocks=t.blocks)[0])
+            alloc_s += time.perf_counter() - t0
+            n_allocs += 1
+        t.num_tokens = len(t.blocks) * pools[s].cfg.block_size
+        live.append((s, t))
+        return True
+
+    for _ in range(events):
+        if live and (len(live) >= n_live_cap or rng.random() < 0.45):
+            s, t = live.pop(int(rng.integers(len(live))))
+            for b in t.blocks:
+                pools[s].decref(b)
+        else:
+            start_one()
+    for p in pools:
+        p.check_invariants()
+    # live-table row-group locality: modal-group fraction per table
+    bpg = pools[0].cfg.blocks_per_group
+    fracs = []
+    for _, t in live:
+        groups = [b // bpg for b in t.blocks]
+        fracs.append(max(groups.count(g) for g in set(groups))
+                     / len(groups))
+    # free-list fragmentation: mean contiguous free run length
+    runs = []
+    for p in pools:
+        run = 0
+        for bid in range(p.cfg.num_blocks):
+            if not p.used[bid]:
+                run += 1
+            elif run:
+                runs.append(run)
+                run = 0
+        if run:
+            runs.append(run)
+    return {"locality": float(np.mean(fracs)) if fracs else 0.0,
+            "free_run": float(np.mean(runs)) if runs else 0.0,
+            "alloc_us": 1e6 * alloc_s / max(n_allocs, 1),
+            "n_allocs": n_allocs}
+
+
 def run(emit, smoke: bool = False) -> None:
     lanes = (8,) if smoke else (8, 32)
     seeds = (0,) if smoke else (0, 1, 2)
@@ -431,3 +648,36 @@ def run(emit, smoke: bool = False) -> None:
         for policy, rate in rates.items():
             emit(f"kvcache/evict/{policy}/zipf{zipf_a}", us / 2,
                  f"{100 * rate:.1f}%hit")
+    # tier boundary: MARS-reordered batched promotion vs arrival order —
+    # the same scattered destination set written in two orders through
+    # the DRAM model; the reordered stream must hold the row-hit bound
+    t0 = time.perf_counter()
+    res = tiered_promotion_comparison()
+    us = (time.perf_counter() - t0) * 1e6
+    for mode, r in res.items():
+        emit(f"kvcache/tier/promote/{mode}/rowhit", us / 2,
+             f"{100 * row_hit_rate(r):.2f}%")
+    # cost-aware vs LRU eviction over the tiered prefix stream: cost mode
+    # protects expensive-to-recompute deep chains, so reuse is higher and
+    # the recompute bill lower
+    t0 = time.perf_counter()
+    tres = tiered_eviction_comparison()
+    us = (time.perf_counter() - t0) * 1e6
+    for policy, d in tres.items():
+        emit(f"kvcache/tier/evict/{policy}/reuse", us / 2,
+             f"{100 * d['reuse']:.2f}%")
+        # recompute bill: detail row, outside the gated namespace
+        # (lower is better — the gate only understands higher-is-better)
+        emit(f"kvcache/tierdetail/evict/{policy}", us / 2,
+             f"{d['recompute_tokens']}tok-recomputed")
+    # allocator soak: Zipf-sized churn fragmentation + alloc latency over
+    # the plain and mesh-sharded pools; locality/free-run are gated,
+    # wall-clock lives in the us column
+    events = 800 if smoke else 2000
+    for kind in ("single", "sharded2"):
+        soak = alloc_soak("single" if kind == "single" else "sharded",
+                          events=events)
+        emit(f"kvcache/alloc/{kind}/locality", soak["alloc_us"],
+             f"{100 * soak['locality']:.2f}%")
+        emit(f"kvcache/alloc/{kind}/freerun", soak["alloc_us"],
+             f"{soak['free_run']:.2f}blocks")

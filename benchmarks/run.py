@@ -25,8 +25,10 @@ import os
 import re
 import sys
 
-# keys gated against the baseline: deterministic DRAM-simulation outputs
-_GATED = re.compile(r"^kvcache/(placement|decode)/")
+# keys gated against the baseline: deterministic DRAM-simulation /
+# allocator-churn outputs (tier & alloc rows are seeded and bit-stable;
+# their wall-clock lives in the ungated us column)
+_GATED = re.compile(r"^kvcache/(placement|decode|alloc|tier)/")
 _BASELINE_DEFAULT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "bench_baseline.json")

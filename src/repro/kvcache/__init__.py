@@ -12,6 +12,9 @@ The serving analogue of the paper's memory system, one module per layer:
   sharded_pool  mesh-sharded pools: one ``BlockPool`` per device-mesh
              shard, the shard coordinate leading the placement key;
              admission routing by prefix-page affinity + shard load
+  tiers      tiered KV memory: eviction demotes registered prefix blocks
+             to host/remote spill tiers, misses promote them back via a
+             MARS-reordered batched copy-in; cost-aware eviction scoring
   backend    the unified KV-backend API: ``KVBackend`` protocol with
              ``DenseBackend`` (concrete per-layer cache), ``PagedBackend``
              (block tables over a layered pool) and
@@ -28,9 +31,10 @@ from repro.kvcache.placement import PlacementPolicy, placement_key, \
 from repro.kvcache.pool import BlockPool, PoolConfig
 from repro.kvcache.prefix import BlockTable, PrefixCache
 from repro.kvcache.sharded_pool import ShardedBlockPool
+from repro.kvcache.tiers import TierManager, TierSpec, default_tiers
 
 __all__ = [
     "BlockPool", "PoolConfig", "BlockTable", "PrefixCache",
     "PlacementPolicy", "EvictionPolicy", "row_group_of", "placement_key",
-    "ShardedBlockPool",
+    "ShardedBlockPool", "TierManager", "TierSpec", "default_tiers",
 ]

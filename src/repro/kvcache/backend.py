@@ -292,7 +292,8 @@ class PagedBackend:
                  *, num_blocks: int = 256, block_size: int = 16,
                  placement: str = "mars", eviction: str = "fifo",
                  share_prefixes: bool = True, decode_mode: str = "kernel",
-                 kernel_interpret: bool = True, device=None):
+                 kernel_interpret: bool = True, device=None,
+                 tiered: bool = False, tier_specs=None):
         """Build a paged backend over ``pool`` (or a fresh pool sized by
         ``num_blocks``/``block_size`` matching the model config).
 
@@ -301,7 +302,9 @@ class PagedBackend:
             family (encoder-decoder / VLM state is not paged yet).
           pool: existing layered ``BlockPool`` to share; its KV buffer
             shape must match ``cfg`` (asserted).
-          placement/eviction: pool policies when building a fresh pool.
+          placement/eviction: pool policies when building a fresh pool
+            ("cost" eviction pairs naturally with ``tiered``: the tier
+            manager installs its recompute-vs-refetch scoring hook).
           share_prefixes: storage-level prefix sharing via ``PrefixCache``.
           decode_mode: "kernel" (Pallas paged_attention per layer, the
             default) or "gather" (dense-view oracle).
@@ -311,6 +314,13 @@ class PagedBackend:
             committed to; ``None`` uses the default device.  A mesh-
             sharded deployment (``ShardedPagedBackend``) gives each
             shard's backend its own device.
+          tiered: put host/mock-remote spill tiers behind the pool
+            (``kvcache.tiers.TierManager``): eviction demotes registered
+            prefix blocks instead of dropping them, and prefix misses
+            that hit a lower tier promote blocks back through a
+            MARS-reordered batched copy-in.  Requires prefix sharing.
+          tier_specs: ``TierSpec`` sequence overriding
+            ``tiers.default_tiers`` (capacity / latency / bandwidth).
         """
         if not cfg.has_attention or cfg.enc_layers \
                 or cfg.family in ("encdec", "vlm"):
@@ -341,6 +351,17 @@ class PagedBackend:
         if share_prefixes:
             self.prefix.attach(pool)
         self.share_prefixes = share_prefixes
+        # tiered KV memory: demote-on-evict / promote-on-miss behind the
+        # pool (kvcache.tiers).  The manager interposes on pool.on_evict
+        # AFTER prefix.attach so demotion captures the payload before
+        # the prefix cache unregisters the block.
+        self.tiers = None
+        if tiered:
+            assert share_prefixes, \
+                "tiered KV spills registered prefix blocks; enable " \
+                "share_prefixes"
+            from repro.kvcache.tiers import TierManager
+            self.tiers = TierManager(pool, self.prefix, tier_specs)
         self._seqs: dict[int, _PagedSeq] = {}
         self._next_sid = 0
         self._batch: list[int] = []      # batch-level API lane order
@@ -456,10 +477,15 @@ class PagedBackend:
         sids, shared = [], []
         for b in range(B):
             prompt = [int(t) for t in tokens[b]]
-            if self.share_prefixes:
-                bids, n = self.prefix.match(prompt, self.pool)
-            else:
+            if not self.share_prefixes:
                 bids, n = [], 0
+            elif self.tiers is not None:
+                # tier-aware match: in-pool chain first, then promotable
+                # lower-tier blocks — copy-ins queue in the manager's
+                # lookahead buffer and land batched (flushed below)
+                bids, n = self.tiers.match(prompt)
+            else:
+                bids, n = self.prefix.match(prompt, self.pool)
             table = BlockTable(list(bids), n)
             allocs0 = self.pool.stats.allocs
             try:
@@ -468,10 +494,14 @@ class PagedBackend:
                     cache=self.prefix if self.share_prefixes else None,
                     kv=(k_all[:, b, n:], v_all[:, b, n:]))
             except RuntimeError:
-                # roll back: this row's partial table (registered blocks
-                # stay as evictable cache, private ones free), then the
-                # rows this call already created — batched prefill is
-                # all-or-nothing
+                # roll back: queued promotions first (their destination
+                # blocks are released with the tables below; the tier
+                # entries were never removed), then this row's partial
+                # table (registered blocks stay as evictable cache,
+                # private ones free), then the rows this call already
+                # created — batched prefill is all-or-nothing
+                if self.tiers is not None:
+                    self.tiers.cancel_promotions()
                 self.prefix.release(table, self.pool)
                 for sid in sids:
                     self.free_seq(sid)
@@ -487,6 +517,11 @@ class PagedBackend:
                 on_alloc(sid, self.pool.stats.allocs - allocs0)
             sids.append(sid)
             shared.append(n)
+        if self.tiers is not None:
+            # the whole batch's promotions land in one MARS-reordered
+            # copy-in; the dirtied blocks re-stage to the device mirror
+            # before the next decode step touches them
+            self.tiers.flush_promotions()
         return np.asarray(logits[:, 0], np.float32), sids, shared
 
     def fork_seq(self, sid: int) -> int:
@@ -532,6 +567,12 @@ class PagedBackend:
 
     def _decode_impl(self, params, sids, tokens, on_alloc=None):
         from repro.kernels.paged_attention import ops
+        # tier contract: every queued promotion flushed (copy-in complete,
+        # block dirtied for staging) before a promoted page can enter a
+        # decode batch — prefill flushes per batch, so the queue must be
+        # empty here
+        assert self.tiers is None or self.tiers.pending == 0, \
+            "unflushed tier promotions entering a decode batch"
         seqs = [self._seqs[s] for s in sids]
         B = len(seqs)
         page = self.pool.cfg.block_size
@@ -881,6 +922,27 @@ class ShardedPagedBackend:
         of its placement key (``placement.placement_key``)."""
         self._check_released()
         return self._seqs[sid][0]
+
+    # -- tiered KV memory (per-shard tiers, demotion/promotion shard-local) --
+
+    @property
+    def tiered(self) -> bool:
+        """True iff the per-shard backends carry spill tiers (the
+        ``tiered=`` kwarg fans out to every shard: one ``TierManager``
+        per shard pool, so demoted payloads never cross shards)."""
+        return self.backends[0].tiers is not None
+
+    def tier_shard_for(self, prompt: Sequence[int]) -> Optional[int]:
+        """Shard whose spill tiers hold the prompt's first full prefix
+        block, or ``None`` — the promotable lower-tier prefix hit the
+        scheduler may count toward affinity routing
+        (``MarsScheduler.tier_probe``).  Routing a request here turns a
+        would-be recompute into a shard-local promotion."""
+        self._check_released()
+        for i, b in enumerate(self.backends):
+            if b.tiers is not None and b.tiers.holds_prefix(prompt):
+                return i
+        return None
 
     # -- batch-level KVBackend API ------------------------------------------
 

@@ -72,7 +72,7 @@ class PoolConfig:
     block_size: int = 16          # tokens per block
     blocks_per_group: int = 8     # DRAM row neighborhood = n_banks pages
     placement: str = "mars"       # "mars" | "naive"
-    eviction: str = "fifo"        # "fifo" (PhyPageOrderQ) | "lru"
+    eviction: str = "fifo"        # "fifo" (PhyPageOrderQ) | "lru" | "cost"
     # KV buffer shape; None = metadata-only pool (simulation / tests)
     n_kv_heads: Optional[int] = None
     head_dim: Optional[int] = None
@@ -261,6 +261,12 @@ class BlockPool:
         self.used[bid] = False
         self.refcount[bid] = 0
         self.content[bid] = None
+        # dirty-staging contract: a freed (evicted/demoted) id must not
+        # linger in the dirty set — the single drain consumer would
+        # re-scatter a dead slot's payload into the device mirror after
+        # the slot is reused (demotion captures the pending payload
+        # before this point; see kvcache.tiers.TierManager)
+        self.dirty.discard(bid)
         self.placement.add_free(bid)
         self.stats.frees += 1
         self._meta_dirty.add(bid)

@@ -195,27 +195,36 @@ class ShardedBlockPool:
         assert n <= self._pending, (n, self._pending)
         self._pending -= n
 
-    def route(self, rid: int, page: str, n: int) -> Optional[int]:
+    def route(self, rid: int, page: str, n: int,
+              tier_hint: Optional[int] = None) -> Optional[int]:
         """Phase 2 (schedule time): commit request ``rid``'s pending
         reservation of ``n`` blocks to a shard.
 
         Shard choice: the sticky ``page`` affinity shard if it still has
-        headroom (shared prefixes co-locate), else the least-loaded shard
-        (live + reserved blocks) that can hold ``n``.  Returns the shard
-        id, or ``None`` when no shard currently has headroom — the caller
-        leaves the request queued and retries after sequences finish.
+        headroom (shared prefixes co-locate); else ``tier_hint`` — the
+        shard whose *spill tiers* hold the request's prefix (a promotable
+        lower-tier hit, stamped by ``MarsScheduler.tier_probe``), so
+        landing there turns a recompute into a shard-local promotion;
+        else the least-loaded shard (live + reserved blocks) that can
+        hold ``n``.  Returns the shard id, or ``None`` when no shard
+        currently has headroom — the caller leaves the request queued
+        and retries after sequences finish.
         """
         assert n <= self._pending, (n, self._pending)
         s = self._page_shard.get(page)
         if s is None or not self.shards[s].can_reserve(n):
-            # rank shards off the shared load snapshot — same numbers the
-            # obs gauges publish (headroom == can_reserve, load == live +
-            # reserved), so routing and telemetry can never disagree
-            fits = [r for r in shard_load_snapshot(self)
-                    if r["headroom"] >= n]
-            if not fits:
-                return None
-            s = min(fits, key=lambda r: (r["load"], r["shard"]))["shard"]
+            if tier_hint is not None \
+                    and self.shards[tier_hint].can_reserve(n):
+                s = tier_hint
+            else:
+                # rank shards off the shared load snapshot — same numbers
+                # the obs gauges publish (headroom == can_reserve, load ==
+                # live + reserved), so routing and telemetry never disagree
+                fits = [r for r in shard_load_snapshot(self)
+                        if r["headroom"] >= n]
+                if not fits:
+                    return None
+                s = min(fits, key=lambda r: (r["load"], r["shard"]))["shard"]
         self._pending -= n
         self.shards[s].reserve(n)
         # refresh LRU position, then trim the oldest entry past the cap

@@ -159,22 +159,27 @@ def main_paged(args):
             backend = ShardedPagedBackend(
                 cfg, n_shards=args.shards, devices=devices,
                 num_blocks=pool_blocks, block_size=16,
-                decode_mode=decode_mode)
+                decode_mode=decode_mode, tiered=args.tiered_kv)
         print(f"[serve --paged {cfg.name}] shards={args.shards} "
               f"mesh_devices={len(mesh_devices)} "
               f"blocks/shard={backend.pool.shard_blocks}")
     else:
         backend = PagedBackend(
             cfg, num_blocks=args.pool_blocks, block_size=16,
-            decode_mode=decode_mode)
+            decode_mode=decode_mode, tiered=args.tiered_kv)
     pool = backend.pool
     sched = MarsScheduler(pool=pool)
+    if args.tiered_kv and args.shards > 1:
+        # admission counts a promotable lower-tier prefix hit toward
+        # shard routing: land the request where its demoted blocks are
+        sched.tier_probe = backend.tier_shard_for
     eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
                       max_lanes=args.batch)
     obs = _attach_metrics(args, eng)
     reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
                     prefix_len=r.prefix_len, max_new=args.new_tokens)
-            for r in synth_requests(args.requests, vocab=cfg.vocab)]
+            for r in synth_requests(args.requests, vocab=cfg.vocab,
+                                    n_prefixes=args.prefixes)]
     t0 = time.time()
     finished = eng.run(reqs)
     dt = time.time() - t0
@@ -190,6 +195,18 @@ def main_paged(args):
           f"prefix_hits={pool.stats.prefix_hits} "
           f"evictions={pool.stats.evictions} "
           f"pool_rejects={sched.stats.pool_rejects} wall={dt:.1f}s")
+    if args.tiered_kv:
+        inner = getattr(backend, "backends", None) or [backend]
+        tm = [b.tiers for b in inner if b.tiers is not None]
+        print(f"[serve --paged {cfg.name}] tiers: "
+              f"demotes={sum(t.stats.demotes for t in tm)} "
+              f"promotes={sum(t.stats.promotes for t in tm)} "
+              f"promoted_tokens={sum(t.stats.promoted_tokens for t in tm)} "
+              f"clean_drops={sum(t.stats.clean_drops for t in tm)} "
+              f"drops={sum(t.stats.drops for t in tm)} "
+              f"stall_us={sum(t.stats.stall_us for t in tm):.1f}")
+        for t in tm:
+            t.check()
 
     # dense-vs-paged parity on a sample of served requests (salt-0 lane of
     # each request is plain greedy).  Gather-path decode runs the identical
@@ -230,6 +247,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prefixes", type=int, default=8,
+                    help="distinct hot prompt prefixes in the synthetic "
+                         "stream; raise past the pool's cached capacity "
+                         "(with --tiered-kv) to force spill traffic")
     ap.add_argument("--paged", action="store_true",
                     help="serve a real config through the paged KV backend")
     ap.add_argument("--kernel-decode", action=argparse.BooleanOptionalAction,
@@ -246,6 +267,13 @@ def main(argv=None):
                          "affinity admission routing, per-shard kernel "
                          "decode); CPU runs force a host-device mesh")
     ap.add_argument("--pool-blocks", type=int, default=256)
+    ap.add_argument("--tiered-kv", action="store_true",
+                    help="with --paged: spill tiers behind the block "
+                         "pool(s) — eviction demotes registered prefix "
+                         "blocks to host/remote tiers, prefix misses "
+                         "promote them back (MARS-reordered batched "
+                         "copy-in); size --pool-blocks small to force "
+                         "spill traffic")
     ap.add_argument("--parity-checks", type=int, default=4,
                     help="with --paged: served sequences re-checked densely")
     ap.add_argument("--metrics", action="store_true",

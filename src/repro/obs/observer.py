@@ -87,6 +87,10 @@ class Observer:
         self.paranoid_every = max(1, paranoid_every)
         self._row_cfg = row_cfg
         self.rows: dict[int, OpenRowCounter] = {}
+        # tier-boundary promotion copy-ins get their own open-row model:
+        # the write stream is disjoint from the decode walk, so mixing
+        # them would blur both gauges
+        self.promo_rows: dict[int, OpenRowCounter] = {}
         self._engine = None
 
     # -- wiring --------------------------------------------------------------
@@ -116,6 +120,12 @@ class Observer:
             for i, b in enumerate(inners):
                 b.obs = self
                 b.obs_shard = i
+                tiers = getattr(b, "tiers", None)
+                if tiers is not None:
+                    tiers.obs = self
+                    tiers.obs_shard = i
+                    self.registry.adopt(f"tier.shard{i}", tiers.stats)
+                    tiers._publish()     # occupancy gauges exist from step 0
         return self
 
     # -- live row-locality ---------------------------------------------------
@@ -136,6 +146,22 @@ class Observer:
                           100.0 * hits / served if served else 0.0)
         self.registry.counter("dram.kv_lines").inc(
             0 if addrs is None else len(addrs))
+
+    def observe_promotion(self, shard: int, addrs) -> None:
+        """Feed one tier-promotion batch's copy-in write stream (64B-line
+        ids from ``TierManager.write_trace``, already MARS-ordered by
+        destination row group) into shard ``shard``'s promotion open-row
+        model and refresh the ``tier.promote_row_hit_pct`` gauges."""
+        rc = self.promo_rows.get(shard)
+        if rc is None:
+            rc = self.promo_rows[shard] = OpenRowCounter(self._row_cfg)
+        rc.observe(addrs)
+        self.registry.set(f"tier.shard{shard}.promote_row_hit_pct",
+                          100.0 * rc.row_hit_rate)
+        hits = sum(r.hits for r in self.promo_rows.values())
+        served = sum(r.served for r in self.promo_rows.values())
+        self.registry.set("tier.promote_row_hit_pct",
+                          100.0 * hits / served if served else 0.0)
 
     # -- per-step bookkeeping (called by the engine) -------------------------
 

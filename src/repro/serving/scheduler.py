@@ -94,6 +94,13 @@ class MarsScheduler:
         self.pool = pool
         self._seq = 0                            # arrival counter
         self.obs = None          # telemetry hook (obs.Observer.attach)
+        # tiered KV memory (sharded pools): optional probe mapping a
+        # prompt to the shard whose spill tiers hold its prefix
+        # (``ShardedPagedBackend.tier_shard_for``) — admission counts a
+        # promotable lower-tier hit toward affinity routing, so the
+        # request lands where its demoted blocks are instead of
+        # recomputing them elsewhere
+        self.tier_probe = None
 
     def _set_of(self, page: str) -> int:
         return int(page, 16) % self.nsets
@@ -151,8 +158,11 @@ class MarsScheduler:
             return True
         if getattr(r, "_shard", None) is not None:
             return True              # already routed (re-scheduled batch)
+        hint = None if self.tier_probe is None \
+            else self.tier_probe(r.prompt)
         shard = self.pool.route(
-            r.rid, r.page, r.blocks_needed(self.pool.cfg.block_size))
+            r.rid, r.page, r.blocks_needed(self.pool.cfg.block_size),
+            tier_hint=hint)
         if shard is None:
             self.stats.shard_defers += 1
             if self.obs is not None:

@@ -16,7 +16,15 @@ Checks, all offline:
     string ``ev``, timestamps non-decreasing;
   * at least one request's timeline reconstructs admit -> free: a rid
     with ``sched.offer``, ``engine.admit``, ``engine.prefill``,
-    ``engine.token`` and ``engine.free`` events in timestamp order.
+    ``engine.token`` and ``engine.free`` events in timestamp order;
+  * tiered-KV telemetry, when present (always with ``--require-tiers``,
+    the CI tiered-serve smoke's mode): ``tier.shardN.<tier>.occupancy``
+    gauges in [0, 1], ``tier.promote_row_hit_pct`` in [0, 100], tier
+    counters non-negative; and the demote -> promote -> decode lifecycle
+    in the trace — every ``tier.promote`` key was demoted earlier on the
+    same shard (tiers start empty, so promotion without a prior demotion
+    is a bookkeeping bug), and a ``backend.decode`` follows a promotion
+    (promoted pages re-enter decode through the staged mirror).
 
 Exits non-zero listing every violation.
 """
@@ -28,6 +36,44 @@ import sys
 # per-rid lifecycle, in required timeline order
 LIFECYCLE = ("sched.offer", "engine.admit", "engine.prefill",
              "engine.token", "engine.free")
+# per-prefix-key tier lifecycle, in required timeline order
+TIER_LIFECYCLE = ("tier.demote", "tier.promote")
+
+
+def check_tier_snapshot(snap: dict, require_tiers: bool) -> list:
+    """Tiered-KV metric catalogue: validated whenever tier gauges are
+    present; with ``require_tiers`` they must be present and the run must
+    have actually spilled (demotes and promotes both counted)."""
+    bad = []
+    gauges = snap.get("gauges", {})
+    counters = snap.get("counters", {})
+    occ = [n for n in gauges
+           if n.startswith("tier.shard") and n.endswith(".occupancy")]
+    if require_tiers and not occ:
+        bad.append("snapshot: --require-tiers but no "
+                   "tier.shardN.<tier>.occupancy gauges")
+    for name in occ:
+        v = gauges[name]
+        if not 0.0 <= v <= 1.0:
+            bad.append(f"snapshot: {name} out of range: {v}")
+        blocks = gauges.get(name.replace(".occupancy", ".blocks"))
+        if blocks is None or blocks < 0:
+            bad.append(f"snapshot: {name} has no matching non-negative "
+                       ".blocks gauge")
+    for name in [n for n in gauges if n.endswith("promote_row_hit_pct")]:
+        v = gauges[name]
+        if not 0.0 <= v <= 100.0:
+            bad.append(f"snapshot: {name} out of range: {v}")
+    if require_tiers:
+        for field in ("demotes", "promotes"):
+            total = sum(v for n, v in counters.items()
+                        if n.startswith("tier.shard")
+                        and n.endswith(f".{field}"))
+            if total <= 0:
+                bad.append(f"snapshot: --require-tiers but no tier "
+                           f"{field} counted (spill never triggered — "
+                           "shrink the pool or add prefixes)")
+    return bad
 
 
 def check_snapshot(snap: dict) -> list:
@@ -117,10 +163,66 @@ def check_trace(lines: list) -> list:
     return bad
 
 
+def check_tier_trace(lines: list, require_tiers: bool) -> list:
+    """Demote -> promote -> decode lifecycle ordering over the tier
+    events (keys are the ``TierManager`` prefix tags; shard-local by
+    construction, so ordering is checked per (shard, key))."""
+    bad = []
+    events = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError:
+            continue                 # check_trace already reported it
+        events.append(ev)
+    demoted: dict = {}               # (shard, key) -> first demote ts
+    promotes = []
+    for ev in events:
+        if ev.get("ev") == "tier.demote":
+            demoted.setdefault((ev.get("shard"), ev.get("key")),
+                               ev["ts"])
+        elif ev.get("ev") == "tier.promote":
+            promotes.append(ev)
+            k = (ev.get("shard"), ev.get("key"))
+            if k not in demoted:
+                bad.append(f"trace: tier.promote of key {ev.get('key')} "
+                           f"on shard {ev.get('shard')} with no earlier "
+                           "tier.demote (tiers start empty)")
+            elif demoted[k] > ev["ts"]:
+                bad.append(f"trace: tier.demote of key {ev.get('key')} "
+                           f"at ts {demoted[k]} after its promote at "
+                           f"ts {ev['ts']}")
+        elif ev.get("ev") == "tier.stall":
+            if ev.get("us", 0) < 0 or ev.get("blocks", 0) <= 0:
+                bad.append(f"trace: malformed tier.stall {ev}")
+    if require_tiers:
+        if not demoted:
+            bad.append("trace: --require-tiers but no tier.demote events")
+        if not promotes:
+            bad.append("trace: --require-tiers but no tier.promote events")
+    if promotes:
+        # a promoted page re-enters decode through the staged mirror: at
+        # least one backend.decode on the promoting shard after the
+        # promotion
+        first = min(p["ts"] for p in promotes)
+        shards = {p.get("shard") for p in promotes}
+        if not any(ev.get("ev") == "backend.decode"
+                   and ev.get("shard") in shards and ev["ts"] >= first
+                   for ev in events):
+            bad.append("trace: no backend.decode follows any tier.promote "
+                       "(promotion never reached a decode batch)")
+    return bad
+
+
 def main(argv: list) -> int:
+    require_tiers = "--require-tiers" in argv
+    argv = [a for a in argv if a != "--require-tiers"]
     if len(argv) != 2:
-        print("usage: check_metrics.py <metrics.json> <trace.jsonl>",
-              file=sys.stderr)
+        print("usage: check_metrics.py <metrics.json> <trace.jsonl> "
+              "[--require-tiers]", file=sys.stderr)
         return 2
     snap_path, trace_path = argv
     failures = []
@@ -131,6 +233,7 @@ def main(argv: list) -> int:
         snap = None
     if snap is not None:
         failures.extend(check_snapshot(snap))
+        failures.extend(check_tier_snapshot(snap, require_tiers))
     try:
         lines = open(trace_path, encoding="utf-8").readlines()
     except OSError as e:
@@ -138,6 +241,7 @@ def main(argv: list) -> int:
         lines = None
     if lines is not None:
         failures.extend(check_trace(lines))
+        failures.extend(check_tier_trace(lines, require_tiers))
     for msg in failures:
         print(f"[metrics] BAD {msg}", file=sys.stderr)
     if failures:
