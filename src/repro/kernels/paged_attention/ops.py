@@ -7,6 +7,11 @@ Views of the same object:
                            ``(B, n_pages)`` int32 operand the Pallas kernel
                            scalar-prefetches (optionally lane-padded for
                            recompile-free batching)
+  ``decode_step_operands`` one ragged decode step's full operand pack —
+                           pow2-padded page tables, lengths, and the
+                           ``(Bp, 1)`` token batch — what
+                           ``backend.PagedBackend.dispatch_decode`` hands
+                           the jitted decode
   ``batch_lane_order``     order decode lanes so sequences whose tail blocks
                            share a DRAM row neighborhood sit adjacent — the
                            ``reorder.mars_order`` policy applied to the batch
@@ -50,6 +55,31 @@ def pool_page_tables(tables: Sequence, pad_to: int | None = None,
         pt[i, :len(t.blocks)] = t.blocks
         lengths[i] = t.num_tokens
     return pt, lengths
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def decode_step_operands(tables: Sequence, tokens: Sequence[int],
+                         block_size: int):
+    """Operand pack for one ragged decode step over ``tables``.
+
+    Returns ``(page_tables (Bp, n_pages) int32, lengths (Bp,) int32,
+    tokens (Bp, 1) int32)`` with both the page axis and the lane axis
+    padded to the next power of two — every lane has room for its new
+    slot (``num_tokens + 1``), and recompiles of the jitted decode are
+    bounded by the pow2 buckets rather than the ragged batch.  Padded
+    lanes carry length 0 (the kernel skips them) and token 0.
+    """
+    B = len(tables)
+    n_pages = _pow2(max(
+        -(-(t.num_tokens + 1) // block_size) for t in tables))
+    pt, lengths = pool_page_tables(tables, pad_to=n_pages,
+                                   pad_lanes=_pow2(B))
+    toks = np.zeros((pt.shape[0], 1), np.int32)
+    toks[:B, 0] = list(tokens)
+    return pt, lengths, toks
 
 
 def batch_lane_order(tables: Sequence, blocks_per_group: int,

@@ -44,22 +44,50 @@ Either way the new token's K/V is extracted from the step and written
 back into the pool host-side after attention (the pool mutates in place,
 exactly like the single-layer engine of PR 1), so the kernel never reads
 a partially-written page.  The pool buffers are staged to device through
-a mirror that re-uploads only the blocks dirtied since the previous step
-(``BlockPool.drain_dirty``) — never the whole pool per token.
+double-buffered mirrors that re-upload only the blocks dirtied since the
+slot was last staged (``BlockPool.drain_dirty``) — never the whole pool
+per token.
 
-A released backend (``release()``) raises a clear "backend released"
-error from every serving entry point instead of an opaque NoneType /
-KeyError; build a new backend to serve again.
+Decode is a split-phase pipeline (MARS's lookahead buffer applied to the
+serving loop — enough in-flight work ahead of the memory system to
+overlap data movement with compute):
 
-Adding a backend: implement ``prefill``/``decode_step``/``lengths``/
-``release`` against ``lm.prefill_parts`` (storage-agnostic prompt run)
-and ``lm.dense_decode_step`` (ragged one-token step), register a
+    step = backend.dispatch_decode(params, tokens, sids=...)  # launch
+    logits = backend.sync(step)        # block on logits only
+    ...                                # sample / emit while KV is in flight
+    backend.flush()                    # commit the deferred KV write-back
+
+``dispatch_decode`` launches the jitted step (jax dispatches
+asynchronously) against a freshly staged mirror slot and returns a
+``DecodeStep`` handle; ``sync`` blocks on the logits and starts the
+non-blocking device→host copy of the new K/V; ``commit`` (normally via
+``flush`` or the next ``dispatch_decode``) appends that K/V to the pool
+one step late.  Every path that could observe or allocate pool state —
+``new_seq``/``prefill``, ``fork_seq``, ``free_seq``, ``release`` —
+flushes first, so a dispatched step's capacity precheck stays valid
+until its commit and CoW forks always see committed KV.  ``decode`` /
+``decode_step`` remain as thin compatibility wrappers (dispatch + sync
++ commit) for call sites that want the old synchronous semantics.
+
+A released backend (``release()``) drains any pending deferred
+write-back (no dirty block is dropped at shutdown), then raises a clear
+"backend released" error from every serving entry point instead of an
+opaque NoneType / KeyError; build a new backend to serve again.
+
+Construction goes through ``make_backend`` — the single documented
+entry point (``decode_mode`` / ``kernel_interpret`` / ``tiered`` /
+``shards`` / ``device`` keyword surface).  Passing a pool positionally
+to ``PagedBackend``/``ShardedPagedBackend`` is deprecated; pass
+``pool=``.  Adding a backend: implement the protocol against
+``lm.prefill_parts`` (storage-agnostic prompt run) and
+``lm.dense_decode_step`` (ragged one-token step), register a
 constructor in ``make_backend``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Optional, Protocol, Sequence, \
     runtime_checkable
 
@@ -72,9 +100,40 @@ from repro.kvcache.prefix import BlockTable, PrefixCache
 from repro.models.config import ModelConfig
 
 
+@dataclasses.dataclass
+class DecodeStep:
+    """Handle for one in-flight decode step.
+
+    ``dispatch_decode`` returns one; ``sync(step)`` fills ``logits`` and
+    flips ``synced``; ``commit(step)`` (or ``flush()``, or the next
+    ``dispatch_decode``) lands the deferred KV write-back and flips
+    ``committed``.  ``dev`` holds the backend's in-flight device futures
+    (logits, new K/V, hybrid state) and ``parts`` the per-shard inner
+    steps of a sharded dispatch — both backend-internal.
+    """
+    index: int                       # per-backend dispatch counter
+    sids: list                       # sequences this step advances
+    tokens: list                     # tokens[i] fed to sids[i]
+    staged: int = 0                  # mirror blocks staged at dispatch
+    synced: bool = False
+    committed: bool = False
+    batch_api: bool = False          # dispatched via the (B, 1) batch API
+    logits: Any = None               # host logits after sync
+    dev: dict = dataclasses.field(default_factory=dict)
+    seqs: Optional[list] = None      # resolved _PagedSeq refs (plain)
+    on_alloc: Optional[Callable[[int, int], None]] = None
+    parts: Optional[list] = None     # sharded: (shard, inner step, idxs)
+
+
 @runtime_checkable
 class KVBackend(Protocol):
-    """What the model needs from its KV storage — nothing more."""
+    """What the model needs from its KV storage — nothing more.
+
+    Decode is split-phase: ``dispatch_decode`` → ``sync`` → ``commit``
+    with a ``DecodeStep`` handle (``flush()`` is the sync+commit
+    barrier); ``decode_step`` remains the synchronous compatibility
+    wrapper over the three phases.
+    """
 
     cfg: ModelConfig
 
@@ -97,6 +156,9 @@ class KVBackend(Protocol):
     def decode_step(self, params, tokens):
         """Advance every prefill lane one token.
 
+        Compatibility wrapper: equivalent to ``dispatch_decode`` +
+        ``sync`` + ``commit`` in one synchronous call.
+
         Args:
           params: the model parameter tree.
           tokens: (B, 1) int32 — lane ``b``'s next input token.
@@ -107,6 +169,44 @@ class KVBackend(Protocol):
         """
         ...
 
+    def dispatch_decode(self, params, tokens, *, sids=None,
+                        on_alloc=None) -> DecodeStep:
+        """Launch one decode step without blocking on its results.
+
+        Commits any pending prior step first (the one-step-deferred
+        write-back), prechecks pool capacity so the eventual commit
+        cannot fail, stages the dirty-block mirror, and dispatches the
+        jitted step.  ``sids=None`` advances the ``prefill`` batch lanes
+        (``tokens`` is the (B, 1) batch); paged backends also take the
+        sequence-level form (``sids`` + per-sid token list).  At most
+        one step may be in flight (dispatched, un-synced) per backend.
+        Returns the ``DecodeStep`` handle to pass to ``sync``/``commit``.
+        """
+        ...
+
+    def sync(self, step: DecodeStep):
+        """Block on a dispatched step's logits (KV write-back stays
+        deferred; the device→host KV copy starts here, non-blocking).
+        Idempotent — a synced step returns its stored logits.  Returns
+        float32 (len(sids), V) row-aligned to sids, or (B, 1, V) for a
+        batch-API step."""
+        ...
+
+    def commit(self, step: Optional[DecodeStep] = None) -> None:
+        """Land the pending synced step's KV write-back into the pool
+        (host-side ``table.extend`` per lane, ``on_alloc`` callbacks).
+        ``step=None`` commits whatever is pending; a committed step is a
+        no-op.  Normally driven by ``flush()`` or the next
+        ``dispatch_decode`` — decode step N commits step N-1."""
+        ...
+
+    def flush(self) -> None:
+        """Barrier: sync any in-flight step and commit any pending
+        write-back.  Idempotent.  Required before anything that must see
+        committed KV — parity checks, ``fork_seq``/``free_seq``/prefill
+        (which call it themselves), and shutdown."""
+        ...
+
     @property
     def lengths(self) -> np.ndarray:
         """Per-lane cached token counts, int32 (B,) — what a position
@@ -114,10 +214,12 @@ class KVBackend(Protocol):
         ...
 
     def release(self) -> None:
-        """Drop all storage (paged: decref every block back to the pool —
-        registered prefix blocks stay evictable, private ones free).
-        Idempotence is not promised; every subsequent entry point raises
-        a clear "backend released" ``RuntimeError``."""
+        """Drain any pending deferred write-back (an implicit ``flush``
+        — no dirty block is dropped at shutdown), then drop all storage
+        (paged: decref every block back to the pool — registered prefix
+        blocks stay evictable, private ones free).  Idempotence is not
+        promised; every subsequent entry point raises a clear "backend
+        released" ``RuntimeError``."""
         ...
 
 
@@ -141,6 +243,7 @@ class DenseBackend:
         self.batch = batch
         self.max_seq = max_seq
         self._cache = lm.init_dense_cache(cfg, batch, max_seq, enc_len)
+        self._steps = 0
 
     def _check_released(self) -> None:
         if self._cache is None:
@@ -163,11 +266,57 @@ class DenseBackend:
     def decode_step(self, params, tokens):
         """One dense decode step at slot ``length`` (jitted; the cache
         pytree is threaded functionally).  tokens: (B, 1) int32.
-        Returns next-token logits (B, 1, V)."""
+        Returns next-token logits (B, 1, V).  Compatibility wrapper over
+        the split-phase lifecycle."""
+        step = self.dispatch_decode(params, tokens)
+        logits = self.sync(step)
+        self.commit(step)
+        return logits
+
+    # -- split-phase decode lifecycle ----------------------------------------
+    # The dense cache is updated functionally inside the jitted step, so
+    # "dispatch" already carries the write-back: sync marks the step
+    # committed and commit/flush are no-ops (no deferred state exists).
+
+    def dispatch_decode(self, params, tokens, *, sids=None,
+                        on_alloc=None) -> DecodeStep:
+        """Launch one dense decode step (jax dispatches asynchronously;
+        nothing blocks until ``sync``).  The dense backend has no
+        sequence-level lanes: ``sids`` must be None."""
         self._check_released()
+        if sids is not None:
+            raise ValueError("DenseBackend has no sequence-level lanes; "
+                             "dispatch with sids=None (the (B, 1) batch)")
         logits, self._cache = _dense_decode(params, self.cfg, tokens,
                                             self._cache)
-        return logits
+        step = DecodeStep(index=self._steps, sids=[], tokens=[],
+                          batch_api=True)
+        step.dev["logits"] = logits
+        self._steps += 1
+        return step
+
+    def sync(self, step: DecodeStep):
+        """Return the step's (B, 1, V) logits (blocking happens when the
+        caller materializes them).  The dense write-back landed inside
+        the jitted step, so the step is committed here too."""
+        if not step.synced:
+            step.logits = step.dev.pop("logits")
+            step.synced = step.committed = True
+        return step.logits
+
+    def commit(self, step: Optional[DecodeStep] = None) -> None:
+        """No deferred write-back exists on the dense path."""
+
+    def flush(self) -> None:
+        """No-op barrier (nothing is ever pending); raises once
+        released, like every other entry point."""
+        self._check_released()
+
+    @property
+    def inflight_steps(self) -> int:
+        """Dispatched-or-pending step count — always 0: the dense cache
+        commits inside the jitted step."""
+        return 0
 
     @property
     def lengths(self) -> np.ndarray:
@@ -194,6 +343,13 @@ class DenseBackend:
                 raise RuntimeError(
                     f"DenseBackend released: cannot read .{name} after "
                     "release(); build a new backend to serve again")
+            if name in ("k", "v"):
+                # legacy concrete-Cache reads; removal note in README
+                warnings.warn(
+                    f"DenseBackend.{name} is a deprecated concrete-Cache "
+                    f"compatibility read; use backend.cache.{name} "
+                    "(scheduled for removal — see README)",
+                    DeprecationWarning, stacklevel=2)
             return getattr(self._cache, name)
         raise AttributeError(name)
 
@@ -288,20 +444,24 @@ class PagedBackend:
     occupancy under hot prefixes.
     """
 
-    def __init__(self, cfg: ModelConfig, pool: Optional[BlockPool] = None,
-                 *, num_blocks: int = 256, block_size: int = 16,
+    def __init__(self, cfg: ModelConfig, *_legacy_pool,
+                 pool: Optional[BlockPool] = None,
+                 num_blocks: int = 256, block_size: int = 16,
                  placement: str = "mars", eviction: str = "fifo",
                  share_prefixes: bool = True, decode_mode: str = "kernel",
                  kernel_interpret: bool = True, device=None,
                  tiered: bool = False, tier_specs=None):
         """Build a paged backend over ``pool`` (or a fresh pool sized by
         ``num_blocks``/``block_size`` matching the model config).
+        Prefer ``make_backend(cfg, "paged", ...)`` — the one documented
+        construction surface.
 
         Args:
           cfg: model config; must be an attention-bearing decoder-only
             family (encoder-decoder / VLM state is not paged yet).
           pool: existing layered ``BlockPool`` to share; its KV buffer
-            shape must match ``cfg`` (asserted).
+            shape must match ``cfg`` (asserted).  Keyword-only in
+            spirit: passing it positionally is deprecated.
           placement/eviction: pool policies when building a fresh pool
             ("cost" eviction pairs naturally with ``tiered``: the tier
             manager installs its recompute-vs-refetch scoring hook).
@@ -322,6 +482,14 @@ class PagedBackend:
           tier_specs: ``TierSpec`` sequence overriding
             ``tiers.default_tiers`` (capacity / latency / bandwidth).
         """
+        if _legacy_pool:
+            if len(_legacy_pool) > 1 or pool is not None:
+                raise TypeError("PagedBackend takes at most one pool")
+            warnings.warn(
+                "passing the pool positionally to PagedBackend is "
+                "deprecated; pass pool= by keyword (or use make_backend)",
+                DeprecationWarning, stacklevel=2)
+            pool = _legacy_pool[0]
         if not cfg.has_attention or cfg.enc_layers \
                 or cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
@@ -370,11 +538,22 @@ class PagedBackend:
         # feed; obs_shard tags events with this backend's shard index
         self.obs = None
         self.obs_shard = 0
-        # device mirror of the pool's KV buffers: decode re-stages only
-        # blocks dirtied since the previous step (this backend is the
-        # pool's single drain_dirty consumer)
-        self._k_dev = self._v_dev = None
+        # double-buffered device mirrors of the pool's KV buffers: two
+        # (k, v) slots, swapped every stage, each with its own pending-
+        # dirty set (both fed from pool.drain_dirty — this backend is the
+        # pool's single drain_dirty consumer).  Staging slot A writes
+        # only blocks dirtied since A was last staged, and can overlap
+        # the kernel still reading slot B.
+        self._mirrors: list = [None, None]
+        self._slot_dirty: list = [set(), set()]
+        self._slot = 0                   # slot the next stage writes
+        self._staged_slot: Optional[int] = None  # slot staged last
         self.staged_blocks_last_step = 0
+        # split-phase decode pipeline: at most one dispatched-un-synced
+        # step (_inflight) and one synced-un-committed step (_pending)
+        self._inflight: Optional[DecodeStep] = None
+        self._pending: Optional[DecodeStep] = None
+        self._steps = 0
 
     def _check_released(self) -> None:
         if self._released:
@@ -392,31 +571,59 @@ class PagedBackend:
         return a if self.device is None else jax.device_put(a, self.device)
 
     def _staged_pages(self):
-        """Stage the pool's host-mutated KV buffers to device, uploading
-        only blocks written since the last call (full upload first time).
-        ``staged_blocks_last_step`` records how many blocks moved."""
+        """Stage the pool's host-mutated KV buffers into the next mirror
+        slot, uploading only blocks written since *that slot* was last
+        staged (both slots are built with a full upload the first time).
+        Alternating slots lets this scatter overlap a kernel still
+        reading the other slot, and the donated scatter keeps it free of
+        pool-sized copies.  ``staged_blocks_last_step`` records how many
+        blocks moved — steady-state that is the union of the last two
+        steps' dirty sets (one step per slot).  Returns the freshly
+        staged ``(k, v)`` device pair."""
         pool = self.pool
-        if self._k_dev is None:
+        if self._mirrors[0] is None:
             pool.drain_dirty()           # full upload covers everything
-            self._k_dev = self._put(pool.k_pages)
-            self._v_dev = self._put(pool.v_pages)
+            for s in (0, 1):
+                self._mirrors[s] = (self._put(pool.k_pages),
+                                    self._put(pool.v_pages))
+                self._slot_dirty[s].clear()
             self.staged_blocks_last_step = pool.cfg.num_blocks
+            self._staged_slot, self._slot = 0, 1
         else:
-            dirty = pool.drain_dirty()
-            self.staged_blocks_last_step = len(dirty)
-            if dirty:
+            fresh = pool.drain_dirty()
+            self._slot_dirty[0].update(fresh)
+            self._slot_dirty[1].update(fresh)
+            s = self._slot
+            pend = sorted(self._slot_dirty[s])
+            self.staged_blocks_last_step = len(pend)
+            if pend:
                 # pad the id list to a power of two (repeating the last
                 # id) so the donated scatter compiles O(log) variants
-                pad = dirty + [dirty[-1]] * (_pow2(len(dirty)) - len(dirty))
+                pad = pend + [pend[-1]] * (_pow2(len(pend)) - len(pend))
                 idx = self._put(np.asarray(pad, np.int32))
-                self._k_dev = _scatter_blocks(
-                    self._k_dev, idx, self._put(pool.k_pages[:, pad]))
-                self._v_dev = _scatter_blocks(
-                    self._v_dev, idx, self._put(pool.v_pages[:, pad]))
+                k, v = self._mirrors[s]
+                self._mirrors[s] = (
+                    _scatter_blocks(k, idx, self._put(pool.k_pages[:, pad])),
+                    _scatter_blocks(v, idx, self._put(pool.v_pages[:, pad])))
+            self._slot_dirty[s].clear()
+            self._staged_slot, self._slot = s, 1 - s
         if self.obs is not None:
             self.obs.trace.event("backend.stage", shard=self.obs_shard,
-                                 blocks=self.staged_blocks_last_step)
-        return self._k_dev, self._v_dev
+                                 blocks=self.staged_blocks_last_step,
+                                 slot=self._staged_slot)
+        return self._mirrors[self._staged_slot]
+
+    @property
+    def _k_dev(self):
+        """K plane of the most recently staged mirror slot (None before
+        the first stage) — the buffer the next kernel launch reads."""
+        return None if self._staged_slot is None \
+            else self._mirrors[self._staged_slot][0]
+
+    @property
+    def _v_dev(self):
+        return None if self._staged_slot is None \
+            else self._mirrors[self._staged_slot][1]
 
     # -- sequence-level API (continuous batching) ---------------------------
 
@@ -453,6 +660,11 @@ class PagedBackend:
         nothing stays live.
         """
         self._check_released()
+        # flush barrier: prefill allocates, and the prefix match reads
+        # refcounts/tokens — both must see the deferred step committed
+        # (this is also what keeps a dispatched step's capacity precheck
+        # valid until its own commit)
+        self.flush()
         if self.obs is not None:
             with self.obs.trace.span("backend.prefill",
                                      shard=self.obs_shard,
@@ -526,8 +738,12 @@ class PagedBackend:
 
     def fork_seq(self, sid: int) -> int:
         """Fork a sequence, sharing every block (CoW on first append);
-        the hybrid side state is copied — it is mutated every step."""
+        the hybrid side state is copied — it is mutated every step.
+        Forces a flush barrier first: the fork's CoW bookkeeping (and
+        its copied SSM/conv state) must see committed KV, not a step
+        still in flight."""
         self._check_released()
+        self.flush()
         src = self._seqs[sid]
         nsid = self._next_sid
         self._next_sid += 1
@@ -539,7 +755,9 @@ class PagedBackend:
 
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
                on_alloc: Optional[Callable[[int, int], None]] = None):
-        """One ragged decode step over live sequences.
+        """One ragged decode step over live sequences — the synchronous
+        compatibility wrapper: ``dispatch_decode`` + ``sync`` +
+        ``commit`` in one call (KV is committed before it returns).
 
         Args:
           sids: sequences to advance (any subset of the live set, each at
@@ -554,19 +772,48 @@ class PagedBackend:
         precheck makes the step all-or-nothing — on "pool exhausted"
         every sequence is exactly as it was.
         """
-        self._check_released()
-        assert sids, "no active sequences to decode (prefill first)"
-        if self.obs is not None:
-            with self.obs.trace.span("backend.decode",
-                                     shard=self.obs_shard,
-                                     lanes=len(sids)) as sp:
-                out = self._decode_impl(params, sids, tokens, on_alloc)
-                sp["staged"] = self.staged_blocks_last_step
-                return out
-        return self._decode_impl(params, sids, tokens, on_alloc)
+        step = self.dispatch_decode(params, tokens, sids=sids,
+                                    on_alloc=on_alloc)
+        out = self.sync(step)
+        self.commit(step)
+        return out
 
-    def _decode_impl(self, params, sids, tokens, on_alloc=None):
+    # -- split-phase decode lifecycle ----------------------------------------
+
+    def dispatch_decode(self, params, tokens, *, sids=None,
+                        on_alloc: Optional[Callable[[int, int], None]]
+                        = None) -> DecodeStep:
+        """Launch one ragged decode step without blocking.
+
+        Commits the pending prior step first (decode step N lands step
+        N-1's dirty blocks), prechecks capacity for *this* step, stages
+        the next mirror slot, and dispatches the jitted step — jax
+        queues the kernel and returns immediately, so the scatter and
+        kernel execution overlap whatever the host does until ``sync``.
+
+        The dispatch-time capacity precheck is sufficient for the
+        deferred commit because every allocating path (``_add_seqs``,
+        ``fork_seq``) and every refcount-changing path (``free_seq``)
+        flushes first — between a dispatch and its commit the pool can
+        only have gained capacity.
+
+        ``sids=None`` dispatches the batch-API lanes (``tokens`` is the
+        (B, 1) int32 batch); otherwise ``tokens[i]`` feeds ``sids[i]``.
+        Raising ("pool exhausted", or a second dispatch while one step
+        is in flight) leaves every sequence exactly as it was.
+        """
         from repro.kernels.paged_attention import ops
+        self._check_released()
+        batch_api = sids is None
+        if batch_api:
+            sids = list(self._batch)
+            tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        assert sids, "no active sequences to decode (prefill first)"
+        if self._inflight is not None:
+            raise RuntimeError(
+                "a decode step is already in flight; sync() it before "
+                "dispatching the next")
+        self._commit_pending()
         # tier contract: every queued promotion flushed (copy-in complete,
         # block dirtied for staging) before a promoted page can enter a
         # decode batch — prefill flushes per batch, so the queue must be
@@ -576,16 +823,26 @@ class PagedBackend:
         seqs = [self._seqs[s] for s in sids]
         B = len(seqs)
         page = self.pool.cfg.block_size
-        # padded page-table view: every lane needs room for slot len(seq)
-        # on the gather path (the kernel path attends the in-flight token
+        # capacity precheck so the deferred write-back cannot die halfway
+        # (rolling back a committed lane would mean undoing CoW/eviction
+        # side effects): each lane needs at most one fresh block — a new
+        # tail, or a CoW copy of a shared tail.  Raising here leaves
+        # every sequence exactly as it was before the step.
+        need = 0
+        for s in seqs:
+            fill = s.table.num_tokens % page
+            if fill == 0 or \
+                    self.pool.refcount[s.table.blocks[-1]] > 1:
+                need += 1
+        if not self.pool.can_alloc(need):
+            raise RuntimeError(
+                f"pool exhausted: decode step needs {need} blocks, "
+                f"free {self.pool.num_free}, cached {self.pool.num_cached}")
+        # padded operand pack: every lane needs room for its new slot on
+        # the gather path (the kernel path attends the in-flight token
         # out of registers, but shares the padding so both compile alike)
-        n_pages = _pow2(max(
-            -(-(len(s.tokens) + 1) // page) for s in seqs))
-        Bp = _pow2(B)                       # lane padding bounds recompiles
-        pt, lengths = ops.pool_page_tables(
-            [s.table for s in seqs], pad_to=n_pages, pad_lanes=Bp)
-        toks = np.zeros((Bp, 1), np.int32)
-        toks[:B, 0] = list(tokens)
+        pt, lengths, toks = ops.decode_step_operands(
+            [s.table for s in seqs], tokens, page)
         kp, vp = self._staged_pages()
         if self.obs is not None:
             # live row-locality: this step's page walk in kernel issue
@@ -600,8 +857,9 @@ class PagedBackend:
         ssm = conv = None
         if self.cfg.has_ssm:
             # batch the per-sequence hybrid side state (padded lanes get
-            # zeros; their outputs are discarded below)
+            # zeros; their outputs are discarded at sync)
             L = self.cfg.n_layers
+            Bp = toks.shape[0]
             ssm_np = np.zeros((L, Bp) + seqs[0].ssm.shape[1:],
                               seqs[0].ssm.dtype)
             conv_np = np.zeros((L, Bp) + seqs[0].conv.shape[1:],
@@ -620,27 +878,90 @@ class PagedBackend:
             logits, k_new, v_new, ssm_new, conv_new = _paged_decode(
                 params, self.cfg, self._put(toks), kp, vp,
                 self._put(pt), self._put(lengths), ssm, conv)
-        k_new = np.asarray(k_new)           # (L, Bp, 1, K, dh)
-        v_new = np.asarray(v_new)
-        if ssm_new is not None:
-            ssm_new = np.asarray(ssm_new)   # (L, Bp, H, P, N)
-            conv_new = np.asarray(conv_new)
-        # capacity precheck so the write-back loop cannot die halfway
-        # (rolling back a committed lane would mean undoing CoW/eviction
-        # side effects): each lane needs at most one fresh block — a new
-        # tail, or a CoW copy of a shared tail.  Raising here leaves
-        # every sequence exactly as it was before the step.
-        need = 0
-        for s in seqs:
-            fill = s.table.num_tokens % page
-            if fill == 0 or \
-                    self.pool.refcount[s.table.blocks[-1]] > 1:
-                need += 1
-        if not self.pool.can_alloc(need):
+        step = DecodeStep(index=self._steps, sids=list(sids),
+                          tokens=[int(t) for t in tokens],
+                          staged=self.staged_blocks_last_step,
+                          batch_api=batch_api, seqs=seqs,
+                          on_alloc=on_alloc)
+        step.dev.update(logits=logits, k=k_new, v=v_new,
+                        ssm=ssm_new, conv=conv_new)
+        self._steps += 1
+        self._inflight = step
+        if self.obs is not None:
+            self.obs.trace.event("backend.dispatch", shard=self.obs_shard,
+                                 step=step.index, lanes=B,
+                                 staged=step.staged)
+        return step
+
+    def sync(self, step: DecodeStep):
+        """Block on a dispatched step's logits.  The new K/V stays on
+        device (its non-blocking device→host copy starts here); the
+        write-back commits one step later.  Idempotent on a synced
+        step.  Returns float32 (len(sids), V) row-aligned to the
+        dispatched sids — or (B, 1, V) for a batch-API step."""
+        self._check_released()
+        if step.synced:
+            return step.logits
+        if step is not self._inflight:
             raise RuntimeError(
-                f"pool exhausted: decode step needs {need} blocks, "
-                f"free {self.pool.num_free}, cached {self.pool.num_cached}")
-        for i, (s, tok) in enumerate(zip(seqs, tokens)):
+                "sync() of a step that is not in flight on this backend")
+        B = len(step.sids)
+        if self.obs is not None:
+            # the span measures the blocking wait — dispatch-to-sync gap
+            with self.obs.trace.span("backend.decode",
+                                     shard=self.obs_shard,
+                                     step=step.index, lanes=B) as sp:
+                sp["staged"] = step.staged
+                logits = np.asarray(step.dev.pop("logits"))
+        else:
+            logits = np.asarray(step.dev.pop("logits"))
+        # logits landing means the step finished; start the KV transfer
+        # for the deferred commit without blocking on it
+        for name in ("k", "v", "ssm", "conv"):
+            arr = step.dev.get(name)
+            if arr is not None and hasattr(arr, "copy_to_host_async"):
+                arr.copy_to_host_async()
+        step.logits = np.asarray(logits[:B, 0], np.float32)
+        if step.batch_api:
+            step.logits = jnp.asarray(step.logits)[:, None, :]
+        step.synced = True
+        self._inflight = None
+        self._pending = step
+        return step.logits
+
+    def commit(self, step: Optional[DecodeStep] = None) -> None:
+        """Land the pending synced step's KV write-back (see
+        ``_commit_pending``).  ``step=None`` commits whatever is
+        pending; committing an already-committed step is a no-op;
+        committing an un-synced step is an error."""
+        self._check_released()
+        if step is not None:
+            if step.committed:
+                return
+            if step is not self._pending:
+                raise RuntimeError(
+                    "commit() of a step that is not pending on this "
+                    "backend (sync() it first)")
+        self._commit_pending()
+
+    def _commit_pending(self) -> None:
+        """The deferred write-back: append the pending step's new K/V to
+        each lane's block table (CoW on shared tails), update hybrid
+        side state, fire ``on_alloc``.  Cannot fail: capacity was
+        prechecked at dispatch and every alloc/refcount path since has
+        flushed first."""
+        step = self._pending
+        if step is None:
+            return
+        self._pending = None
+        k_new = np.asarray(step.dev.pop("k"))   # (L, Bp, 1, K, dh)
+        v_new = np.asarray(step.dev.pop("v"))
+        ssm_new = step.dev.pop("ssm")
+        conv_new = step.dev.pop("conv")
+        if ssm_new is not None:
+            ssm_new = np.asarray(ssm_new)       # (L, Bp, H, P, N)
+            conv_new = np.asarray(conv_new)
+        for i, (s, tok) in enumerate(zip(step.seqs, step.tokens)):
             allocs0 = self.pool.stats.allocs
             new_tokens = s.tokens + [int(tok)]
             s.table.extend(
@@ -651,14 +972,39 @@ class PagedBackend:
             if ssm_new is not None:
                 s.ssm = np.ascontiguousarray(ssm_new[:, i])
                 s.conv = np.ascontiguousarray(conv_new[:, i])
-            if on_alloc is not None:
-                on_alloc(s.sid, self.pool.stats.allocs - allocs0)
-        return np.asarray(logits[:B, 0], np.float32)
+            if step.on_alloc is not None:
+                step.on_alloc(s.sid, self.pool.stats.allocs - allocs0)
+        step.committed = True
+        step.seqs = None
+        if self.obs is not None:
+            self.obs.trace.event("backend.commit", shard=self.obs_shard,
+                                 step=step.index, lanes=len(step.sids))
+
+    def flush(self) -> None:
+        """Barrier: sync any in-flight step and commit any pending
+        write-back.  Idempotent — flushing twice (or with nothing
+        outstanding) is a no-op.  ``release()`` drains through here, so
+        a released backend never holds pending work; flushing after
+        release raises like every other entry point."""
+        self._check_released()
+        if self._inflight is not None:
+            self.sync(self._inflight)
+        self._commit_pending()
+
+    @property
+    def inflight_steps(self) -> int:
+        """Steps between dispatch and commit: 0 (drained), 1 (one step
+        dispatched or pending), or 2 (one in flight + one pending)."""
+        return int(self._inflight is not None) + \
+            int(self._pending is not None)
 
     def free_seq(self, sid: int) -> None:
         """Finished sequence: registered prefix blocks stay evictable;
-        the hybrid side state dies with the sequence."""
+        the hybrid side state dies with the sequence.  Flushes first —
+        the deferred step may still owe this sequence (and others) a
+        committed token, and freeing mid-step would strand it."""
         self._check_released()
+        self.flush()
         seq = self._seqs.pop(sid)
         self.prefix.release(seq.table, self.pool)
 
@@ -706,13 +1052,21 @@ class PagedBackend:
             [self._seqs[s].table.num_tokens for s in self._batch], np.int32)
 
     def release(self) -> None:
-        """Free every live sequence (registered prefix blocks stay as
-        evictable cache), drop the device mirror, and poison the backend:
-        all later entry points raise "backend released"."""
+        """Drain the decode pipeline (implicit flush — a pending step's
+        dirty blocks land in the pool, never silently dropped), free
+        every live sequence (registered prefix blocks stay as evictable
+        cache), drop the mirror slots, and poison the backend: all later
+        entry points raise "backend released"."""
+        if not self._released:
+            if self._inflight is not None:
+                self.sync(self._inflight)
+            self._commit_pending()
         for sid in list(self._seqs):
             self.free_seq(sid)
         self._batch = []
-        self._k_dev = self._v_dev = None
+        self._mirrors = [None, None]
+        self._slot_dirty = [set(), set()]
+        self._slot, self._staged_slot = 0, None
         self._released = True
 
 
@@ -742,14 +1096,18 @@ class ShardedPagedBackend:
     ``DenseBackend``/``PagedBackend``.
     """
 
-    def __init__(self, cfg: ModelConfig, pool=None, *,
+    def __init__(self, cfg: ModelConfig, *_legacy_pool, pool=None,
                  n_shards: Optional[int] = None, mesh=None,
                  devices: Optional[Sequence] = None,
                  num_blocks: int = 256, block_size: int = 16,
                  placement: str = "mars", eviction: str = "fifo", **kw):
-        """Args:
+        """Prefer ``make_backend(cfg, "paged", shards=N, ...)`` — the one
+        documented construction surface.
+
+        Args:
           pool: a ``ShardedBlockPool`` to drive, or None to build one
-            (``num_blocks`` total across shards).
+            (``num_blocks`` total across shards).  Passing it
+            positionally is deprecated; pass ``pool=``.
           n_shards/mesh: shard-count discovery when building the pool —
             forwarded to ``ShardedBlockPool`` (mesh model axis; 1
             without a mesh).
@@ -765,6 +1123,15 @@ class ShardedPagedBackend:
         """
         from repro.kvcache.sharded_pool import ShardedBlockPool, \
             discover_shards
+        if _legacy_pool:
+            if len(_legacy_pool) > 1 or pool is not None:
+                raise TypeError(
+                    "ShardedPagedBackend takes at most one pool")
+            warnings.warn(
+                "passing the pool positionally to ShardedPagedBackend is "
+                "deprecated; pass pool= by keyword (or use make_backend)",
+                DeprecationWarning, stacklevel=2)
+            pool = _legacy_pool[0]
         if pool is None:
             n_shards = discover_shards(n_shards, mesh)
             num_blocks = -(-num_blocks // n_shards) * n_shards
@@ -782,7 +1149,7 @@ class ShardedPagedBackend:
         self.cfg = cfg
         self.pool = pool
         self.backends = [
-            PagedBackend(cfg, shard_pool,
+            PagedBackend(cfg, pool=shard_pool,
                          device=None if devices is None else devices[i],
                          **kw)
             for i, shard_pool in enumerate(pool.shards)]
@@ -791,6 +1158,11 @@ class ShardedPagedBackend:
         self._next_sid = 0
         self._batch: list[int] = []
         self._released = False
+        # split-phase pipeline state (mirrors PagedBackend's; the inner
+        # per-shard steps live in the outer step's ``parts``)
+        self._inflight: Optional[DecodeStep] = None
+        self._pending: Optional[DecodeStep] = None
+        self._steps = 0
 
     def _check_released(self) -> None:
         if self._released:
@@ -849,8 +1221,10 @@ class ShardedPagedBackend:
     def fork_seq(self, sid: int) -> int:
         """Fork within the parent's shard — CoW forks are shard-local by
         construction (blocks of one pool cannot be referenced from
-        another)."""
+        another).  Forces a flush barrier first (every shard — the
+        outer step is all-or-nothing across shards)."""
         self._check_released()
+        self.flush()
         shard, isid = self._seqs[sid]
         nisid = self.backends[shard].fork_seq(isid)
         gsid = self._next_sid
@@ -861,24 +1235,52 @@ class ShardedPagedBackend:
 
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
                on_alloc: Optional[Callable[[int, int], None]] = None):
-        """One ragged decode round across shards: group ``sids`` by
-        shard, run one ``PagedBackend.decode`` (one kernel invocation
-        over that shard's pool) per shard, reassemble logits in call
-        order.  Returns float32 (len(sids), V) row-aligned to sids.
+        """One ragged decode round across shards — the synchronous
+        compatibility wrapper: ``dispatch_decode`` + ``sync`` +
+        ``commit``.  Even this wrapper is issue-then-gather: every
+        shard's kernel is dispatched before any shard's logits are
+        awaited.  Returns float32 (len(sids), V) row-aligned to sids.
 
         All-or-nothing across shards, like ``PagedBackend.decode`` is
         within one: every shard's worst-case block need is prechecked
-        before ANY shard commits its write-back, so a "pool exhausted"
-        raise leaves every sequence — on every shard — exactly as it
-        was (no lane double-appends KV on a retry)."""
+        before ANY shard dispatches, so a "pool exhausted" raise leaves
+        every sequence — on every shard — exactly as it was (no lane
+        double-appends KV on a retry)."""
+        step = self.dispatch_decode(params, tokens, sids=sids,
+                                    on_alloc=on_alloc)
+        out = self.sync(step)
+        self.commit(step)
+        return out
+
+    # -- split-phase decode lifecycle (issue-then-gather) --------------------
+
+    def dispatch_decode(self, params, tokens, *, sids=None,
+                        on_alloc: Optional[Callable[[int, int], None]]
+                        = None) -> DecodeStep:
+        """Dispatch one decode round on every involved shard before any
+        is synced: flush (committing the prior round everywhere), run
+        the cross-shard capacity precheck, then launch each shard's
+        kernel back-to-back — jax queues them asynchronously, so the
+        per-shard kernels and mirror scatters overlap instead of running
+        host-blocking round trips shard by shard."""
         self._check_released()
+        batch_api = sids is None
+        if batch_api:
+            sids = list(self._batch)
+            tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
         assert sids, "no active sequences to decode (prefill first)"
+        if self._inflight is not None:
+            raise RuntimeError(
+                "a decode step is already in flight; sync() it before "
+                "dispatching the next")
+        self._commit_pending()
         by_shard: dict[int, list[int]] = {}
         for i, s in enumerate(sids):
             by_shard.setdefault(self._seqs[s][0], []).append(i)
-        # cross-shard capacity precheck (mirrors PagedBackend.decode's):
+        # cross-shard capacity precheck (mirrors the per-shard one):
         # each lane needs at most one fresh block — a new tail, or a CoW
-        # copy of a shared tail
+        # copy of a shared tail.  Prechecking every shard before ANY
+        # dispatches keeps the round all-or-nothing.
         page = self.pool.cfg.block_size
         for shard, idxs in by_shard.items():
             inner = self.backends[shard]
@@ -893,21 +1295,91 @@ class ShardedPagedBackend:
                     f"pool exhausted on shard {shard}: decode step needs "
                     f"{need} blocks, free {inner.pool.num_free}, "
                     f"cached {inner.pool.num_cached}")
-        rows: dict[int, np.ndarray] = {}
+        parts = []
         for shard, idxs in sorted(by_shard.items()):
             cb = None if on_alloc is None else \
                 (lambda isid, n, _s=shard:
                  on_alloc(self._rev[(_s, isid)], n))
-            lg = self.backends[shard].decode(
-                params, [self._seqs[sids[i]][1] for i in idxs],
-                [tokens[i] for i in idxs], on_alloc=cb)
+            inner_step = self.backends[shard].dispatch_decode(
+                params, [tokens[i] for i in idxs],
+                sids=[self._seqs[sids[i]][1] for i in idxs], on_alloc=cb)
+            parts.append((shard, inner_step, idxs))
+        step = DecodeStep(index=self._steps, sids=list(sids),
+                          tokens=[int(t) for t in tokens],
+                          staged=self.staged_blocks_last_step,
+                          batch_api=batch_api, parts=parts)
+        self._steps += 1
+        self._inflight = step
+        return step
+
+    def sync(self, step: DecodeStep):
+        """Gather every shard's logits (all kernels were already issued
+        by ``dispatch_decode``) and reassemble rows in call order.
+        Idempotent on a synced step."""
+        self._check_released()
+        if step.synced:
+            return step.logits
+        if step is not self._inflight:
+            raise RuntimeError(
+                "sync() of a step that is not in flight on this backend")
+        rows: dict[int, np.ndarray] = {}
+        for shard, inner_step, idxs in step.parts:
+            lg = self.backends[shard].sync(inner_step)
             for j, i in enumerate(idxs):
                 rows[i] = lg[j]
-        return np.stack([rows[i] for i in range(len(sids))])
+        step.logits = np.stack([rows[i] for i in range(len(step.sids))])
+        if step.batch_api:
+            step.logits = jnp.asarray(step.logits)[:, None, :]
+        step.synced = True
+        self._inflight = None
+        self._pending = step
+        return step.logits
+
+    def commit(self, step: Optional[DecodeStep] = None) -> None:
+        """Commit every shard's part of the pending round."""
+        self._check_released()
+        if step is not None:
+            if step.committed:
+                return
+            if step is not self._pending:
+                raise RuntimeError(
+                    "commit() of a step that is not pending on this "
+                    "backend (sync() it first)")
+        self._commit_pending()
+
+    def _commit_pending(self) -> None:
+        step = self._pending
+        if step is None:
+            return
+        self._pending = None
+        for shard, inner_step, _ in step.parts:
+            self.backends[shard].commit(inner_step)
+        step.committed = True
+
+    def flush(self) -> None:
+        """Barrier across every shard: sync the in-flight round, commit
+        the pending one, and drain each shard backend (covers direct
+        inner-backend use too).  Idempotent; raises once released."""
+        self._check_released()
+        if self._inflight is not None:
+            self.sync(self._inflight)
+        self._commit_pending()
+        for b in self.backends:
+            b.flush()
+
+    @property
+    def inflight_steps(self) -> int:
+        """Cross-shard rounds between dispatch and commit (0, 1, or 2 —
+        a round counts once however many shards it spans)."""
+        return int(self._inflight is not None) + \
+            int(self._pending is not None)
 
     def free_seq(self, sid: int) -> None:
-        """Release a finished sequence back to its shard's pool."""
+        """Release a finished sequence back to its shard's pool (after
+        the flush barrier — the deferred round may still owe it a
+        committed token)."""
         self._check_released()
+        self.flush()
         shard, isid = self._seqs.pop(sid)
         del self._rev[(shard, isid)]
         self.backends[shard].free_seq(isid)
@@ -957,6 +1429,7 @@ class ShardedPagedBackend:
         Returns last-position logits (B, 1, V) in row order."""
         self._check_released()
         assert frontend_emb is None, "paged backend has no frontend state"
+        self.flush()
         old, self._batch = self._batch, []
         for sid in old:
             self.free_seq(sid)
@@ -1013,7 +1486,12 @@ class ShardedPagedBackend:
                           np.int32)
 
     def release(self) -> None:
-        """Release every shard backend; later entry points raise."""
+        """Drain the pipeline (implicit flush), then release every shard
+        backend; later entry points raise."""
+        if not self._released:
+            if self._inflight is not None:
+                self.sync(self._inflight)
+            self._commit_pending()
         for b in self.backends:
             b.release()
         self._seqs.clear()
@@ -1024,8 +1502,18 @@ class ShardedPagedBackend:
 
 def make_backend(cfg: ModelConfig, kind: str = "dense", *,
                  batch: int = 1, max_seq: int = 0, enc_len: int = 0,
-                 pool: Optional[BlockPool] = None, **kw) -> KVBackend:
-    """Backend registry: "dense" | "paged" | "sharded-paged".
+                 pool: Optional[BlockPool] = None,
+                 shards: Optional[int] = None, device=None,
+                 **kw) -> KVBackend:
+    """Backend registry — the single documented construction surface:
+    "dense" | "paged" | "sharded-paged".
+
+    One keyword surface configures every kind alike: ``decode_mode``
+    ("kernel"/"gather"), ``kernel_interpret`` (False on real TPU),
+    ``tiered`` (spill tiers behind the pool), ``shards`` (shard count —
+    ``shards > 1`` turns "paged" into the mesh-sharded backend), and
+    ``device`` (the jax device for the staged mirror; per-shard
+    ``devices=[...]`` for sharded kinds).
 
     Args:
       batch/max_seq: capacity request — dense allocates (B, max_seq)
@@ -1034,6 +1522,10 @@ def make_backend(cfg: ModelConfig, kind: str = "dense", *,
         an explicit ``pool`` overrides it.
       pool: concrete storage to share (``BlockPool`` for "paged",
         ``ShardedBlockPool`` for "sharded-paged").
+      shards: partition the pool across this many shards (kind "paged"
+        with ``shards > 1`` routes to "sharded-paged"; aliases
+        ``n_shards`` there).
+      device: jax device for a paged backend's mirror + operands.
       Remaining kwargs forward to the backend constructor.
     Returns: an object satisfying the ``KVBackend`` protocol.
 
@@ -1041,10 +1533,38 @@ def make_backend(cfg: ModelConfig, kind: str = "dense", *,
     Traceback (most recent call last):
         ...
     ValueError: unknown KV backend kind 'holographic'
+
+    The split-phase decode lifecycle (dispatch → sync → commit, with
+    ``flush()`` as the barrier — decode step N commits step N-1):
+
+    >>> import jax
+    >>> from repro import configs
+    >>> from repro.models import lm
+    >>> cfg = configs.get_smoke("qwen1_5_0_5b")
+    >>> params = lm.init(cfg, jax.random.key(0)).params
+    >>> b = make_backend(cfg, "paged", num_blocks=16, block_size=4,
+    ...                  decode_mode="gather")
+    >>> sid, _, _ = b.new_seq(params, [1, 2, 3, 4, 5])
+    >>> step = b.dispatch_decode(params, [7], sids=[sid])  # no block
+    >>> step.synced, b.inflight_steps
+    (False, 1)
+    >>> logits = b.sync(step)              # block on logits only
+    >>> logits.shape[0], step.synced, step.committed
+    (1, True, False)
+    >>> b.table(sid).num_tokens            # write-back still deferred
+    5
+    >>> b.flush()                          # barrier: commit the KV
+    >>> b.table(sid).num_tokens, b.inflight_steps
+    (6, 0)
+    >>> b.release()
     """
     if kind == "dense":
         return DenseBackend(cfg, batch, max_seq, enc_len)
     if kind in ("paged", "sharded-paged"):
+        if shards is not None and kind == "paged" and shards > 1:
+            kind = "sharded-paged"
+        if kind == "sharded-paged" and shards is not None:
+            kw.setdefault("n_shards", shards)
         size_request = pool is None and "num_blocks" not in kw and max_seq
         # honor the caller's capacity request: room for `batch` lanes of
         # max_seq tokens (+1 decode slot each)
@@ -1053,7 +1573,10 @@ def make_backend(cfg: ModelConfig, kind: str = "dense", *,
         if kind == "paged":
             if size_request:
                 kw["num_blocks"] = batch * lane_blocks
-            return PagedBackend(cfg, pool, **kw)
+            return PagedBackend(cfg, pool=pool, device=device, **kw)
+        if device is not None:
+            raise ValueError(
+                "sharded-paged takes per-shard devices=[...], not device=")
         if size_request:
             from repro.kvcache.sharded_pool import discover_shards
             n = kw["n_shards"] = discover_shards(kw.get("n_shards"),
@@ -1062,5 +1585,5 @@ def make_backend(cfg: ModelConfig, kind: str = "dense", *,
             # evenly would under-size shards whenever n does not divide
             # batch: every shard must hold its share of WHOLE lanes
             kw["num_blocks"] = n * (-(-batch // n)) * lane_blocks
-        return ShardedPagedBackend(cfg, pool, **kw)
+        return ShardedPagedBackend(cfg, pool=pool, **kw)
     raise ValueError(f"unknown KV backend kind {kind!r}")

@@ -136,7 +136,7 @@ def main_paged(args):
     parity."""
     if args.toy:
         return main_paged_toy(args)
-    from repro.kvcache.backend import PagedBackend, ShardedPagedBackend
+    from repro.kvcache.backend import make_backend
     from repro.serve.engine import PagedLM, ServeEngine
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -156,16 +156,16 @@ def main_paged(args):
                    for s in range(args.shards)]
         with shctx.use_mesh(mesh):
             pool_blocks = -(-args.pool_blocks // args.shards) * args.shards
-            backend = ShardedPagedBackend(
-                cfg, n_shards=args.shards, devices=devices,
+            backend = make_backend(
+                cfg, "paged", shards=args.shards, devices=devices,
                 num_blocks=pool_blocks, block_size=16,
                 decode_mode=decode_mode, tiered=args.tiered_kv)
         print(f"[serve --paged {cfg.name}] shards={args.shards} "
               f"mesh_devices={len(mesh_devices)} "
               f"blocks/shard={backend.pool.shard_blocks}")
     else:
-        backend = PagedBackend(
-            cfg, num_blocks=args.pool_blocks, block_size=16,
+        backend = make_backend(
+            cfg, "paged", num_blocks=args.pool_blocks, block_size=16,
             decode_mode=decode_mode, tiered=args.tiered_kv)
     pool = backend.pool
     sched = MarsScheduler(pool=pool)
@@ -174,7 +174,7 @@ def main_paged(args):
         # shard routing: land the request where its demoted blocks are
         sched.tier_probe = backend.tier_shard_for
     eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
-                      max_lanes=args.batch)
+                      max_lanes=args.batch, pipeline=args.pipeline)
     obs = _attach_metrics(args, eng)
     reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
                     prefix_len=r.prefix_len, max_new=args.new_tokens)
@@ -188,7 +188,8 @@ def main_paged(args):
     shard_note = "" if args.shards <= 1 else \
         f"shards={args.shards} shard_defers={sched.stats.shard_defers} "
     print(f"[serve --paged {cfg.name}] layers={cfg.n_layers} "
-          f"decode={backend.decode_mode} {shard_note}"
+          f"decode={backend.decode_mode} "
+          f"pipeline={'on' if args.pipeline else 'off'} {shard_note}"
           f"served={len(finished)} steps={eng.stats.steps} "
           f"prefill_tokens={eng.stats.prefill_tokens} "
           f"decode_tokens={eng.stats.decode_tokens} "
@@ -261,6 +262,13 @@ def main(argv=None):
                          "--no-kernel-decode uses the gathered dense view")
     ap.add_argument("--toy", action="store_true",
                     help="with --paged: single-layer ToyModel engine demo")
+    ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="with --paged: drive the split-phase decode "
+                         "pipeline (flush -> dispatch -> sync; KV write-"
+                         "back one step deferred; default on); "
+                         "--no-pipeline serves through the synchronous "
+                         "decode() wrapper — tokens are identical")
     ap.add_argument("--shards", type=int, default=1,
                     help="with --paged: partition the KV pool across this "
                          "many mesh shards (per-shard pools, prefix-"

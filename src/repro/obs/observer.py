@@ -191,6 +191,13 @@ class Observer:
         es = engine.stats
         self.registry.set("kvcache.prefix_hit_rate",
                           es.shared_prompt_tokens / max(es.prefill_tokens, 1))
+        backend = getattr(engine.model, "backend", None)
+        if backend is not None:
+            # decode-pipeline depth: 0 idle, 1 dispatched-unsynced or
+            # synced-uncommitted, 2 both (one step in flight on device
+            # while the previous step's write-back is still deferred)
+            self.registry.set("backend.inflight_steps",
+                              getattr(backend, "inflight_steps", 0))
 
     # -- surfacing -----------------------------------------------------------
 

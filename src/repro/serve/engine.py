@@ -26,6 +26,11 @@ Two model drivers:
                  ``decode_mode`` picks the per-layer Pallas
                  ``paged_attention`` kernel path (default) or the gathered
                  dense-view oracle; ``use_kernel`` overrides it.
+
+The LM decode round drives the backend's split-phase pipeline by default
+(``flush -> dispatch_decode -> sync``; KV write-back commits one step
+deferred) — ``ServeEngine(pipeline=False)`` restores the synchronous
+``decode()`` wrapper.  Served tokens are identical either way.
 """
 from __future__ import annotations
 
@@ -90,7 +95,7 @@ class PagedLM:
 def make_paged_lm(params, cfg, pool: Optional[BlockPool] = None,
                   **backend_kw) -> PagedLM:
     from repro.kvcache.backend import PagedBackend
-    return PagedLM(params, cfg, PagedBackend(cfg, pool, **backend_kw))
+    return PagedLM(params, cfg, PagedBackend(cfg, pool=pool, **backend_kw))
 
 
 @dataclasses.dataclass
@@ -123,11 +128,20 @@ class EngineStats(StatGroup):
 class ServeEngine:
     def __init__(self, pool: BlockPool, scheduler: MarsScheduler,
                  model: Optional[Union[ToyModel, PagedLM]] = None, *,
-                 max_lanes: int = 8, use_kernel: Optional[bool] = None):
+                 max_lanes: int = 8, use_kernel: Optional[bool] = None,
+                 pipeline: bool = True):
         """``use_kernel``: ToyModel — decode inline through the Pallas
         kernel instead of the jnp oracle (default oracle).  PagedLM —
         override the backend's ``decode_mode`` ("kernel"/"gather");
-        ``None`` leaves the backend as configured (kernel by default)."""
+        ``None`` leaves the backend as configured (kernel by default).
+
+        ``pipeline``: PagedLM decode drives the split-phase backend
+        lifecycle (``flush -> dispatch_decode -> sync``), leaving each
+        step's KV write-back deferred until the next step's flush so the
+        device->host copy overlaps host-side sampling/admission.
+        ``False`` falls back to the synchronous ``decode()`` wrapper
+        (every step fully committed before the engine sees its tokens);
+        tokens are identical either way."""
         assert pool.k_pages is not None, "engine needs a pool with KV buffers"
         self.pool = pool
         # mesh-sharded pools: reservations are per-routed-request and lane
@@ -151,6 +165,7 @@ class ServeEngine:
             self.cache = PrefixCache(pool.cfg.block_size)
             self.cache.attach(pool)
             self.use_kernel = bool(use_kernel)
+        self.pipeline = pipeline
         self.max_lanes = max_lanes
         self.running: list[SeqState] = []
         self.finished: dict[int, list] = {}
@@ -373,12 +388,40 @@ class ServeEngine:
                 nxt[id(s)] = s.pending
                 s.pending = None
         if live:
-            logits = lm.backend.decode(
-                lm.params, [s.sid for s in live],
-                [s.tokens[-1] for s in live], on_alloc=self._on_alloc)
+            if self.pipeline:
+                logits = self._decode_lm_pipelined(live)
+            else:
+                logits = lm.backend.decode(
+                    lm.params, [s.sid for s in live],
+                    [s.tokens[-1] for s in live], on_alloc=self._on_alloc)
             for s, lg in zip(live, logits):
                 nxt[id(s)] = lm.next_token(lg, s.salt)
         return [nxt[id(s)] for s in self.running]
+
+    def _decode_lm_pipelined(self, live: list) -> list:
+        """Split-phase decode round: ``flush`` commits the PREVIOUS step's
+        deferred KV write-back (the one-step lag MARS's lookahead buffer
+        affords), ``dispatch_decode`` launches this step on every shard
+        without blocking, ``sync`` blocks on the logits only — the new
+        KV rides a non-blocking device->host copy that lands before the
+        next flush.  Phase wall-clock splits feed the
+        ``engine.{commit,dispatch,sync}_ms`` histograms."""
+        lm, obs = self._lm, self.obs
+        backend = lm.backend
+        t0 = time.perf_counter()
+        backend.flush()
+        t1 = time.perf_counter()
+        step = backend.dispatch_decode(
+            lm.params, [s.tokens[-1] for s in live],
+            sids=[s.sid for s in live], on_alloc=self._on_alloc)
+        t2 = time.perf_counter()
+        logits = backend.sync(step)
+        t3 = time.perf_counter()
+        if obs is not None:
+            obs.registry.observe("engine.commit_ms", (t1 - t0) * 1e3)
+            obs.registry.observe("engine.dispatch_ms", (t2 - t1) * 1e3)
+            obs.registry.observe("engine.sync_ms", (t3 - t2) * 1e3)
+        return logits
 
     def run(self, requests, *, max_steps: int = 10_000) -> dict[int, list]:
         """Drive submit/step to completion (the offline serving loop)."""

@@ -236,7 +236,10 @@ class MarsScheduler:
                     self._drop_page(page)
         self.stats.scheduled += len(out)
         self.stats.batches += 1 if out else 0
-        self.stats.wait_sum += sum(now - r.arrival for r in out)
+        # clamp per-request: a request admitted before its arrival clock
+        # tick (offline replay drives `now` coarser than arrivals) has
+        # waited nothing, and the aggregate must never go negative
+        self.stats.wait_sum += sum(max(now - r.arrival, 0.0) for r in out)
         return out
 
     def _drop_page(self, page: str) -> None:

@@ -1,0 +1,446 @@
+"""Split-phase decode pipeline: dispatch/sync/commit lifecycle parity,
+flush-barrier semantics (fork, free, release), sharded issue-then-gather
+ordering, pool-exhaustion rollback with work in flight, and the
+construction-surface deprecations that rode the API redesign."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # hypothesis is optional in CI
+    st = None
+
+from repro import configs
+from repro.kvcache.backend import (DenseBackend, PagedBackend,
+                                   ShardedPagedBackend, make_backend)
+from repro.models import lm
+
+ARCH = "qwen1_5_0_5b"
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_smoke(ARCH)
+    params = lm.init(cfg, jax.random.key(0)).params
+    return cfg, params
+
+
+def _greedy(logits) -> list:
+    return [int(np.argmax(np.asarray(lg, np.float32))) for lg in logits]
+
+
+# ---------------------------------------------------------------------------
+# pipelined vs sequential parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decode_mode", ["gather", "kernel"])
+def test_pipelined_matches_sequential_bitwise_ragged(model, decode_mode):
+    """Same decode mode, same operand values, same jitted function — the
+    pipeline only reorders work, so pipelined logits are BITWISE equal
+    to the sequential wrapper's, over ragged lanes, every step."""
+    cfg, params = model
+    prompts = [list(range(1, 6)), list(range(10, 19)),
+               list(range(30, 44)), list(range(50, 67))]
+    backends, sids = [], []
+    for _ in range(2):
+        b = PagedBackend(cfg, num_blocks=64, block_size=4,
+                         decode_mode=decode_mode, share_prefixes=False)
+        backends.append(b)
+        sids.append([b.new_seq(params, p)[0] for p in prompts])
+    seq_b, pipe_b = backends
+    last_s = last_p = [p[-1] for p in prompts]
+    for _ in range(4):
+        lg_seq = seq_b.decode(params, sids[0], last_s)
+        pipe_b.flush()
+        step = pipe_b.dispatch_decode(params, last_p, sids=sids[1])
+        assert pipe_b.inflight_steps == 1
+        lg_pipe = pipe_b.sync(step)
+        assert pipe_b.inflight_steps == 1      # synced, commit deferred
+        np.testing.assert_array_equal(np.asarray(lg_seq),
+                                      np.asarray(lg_pipe))
+        last_s, last_p = _greedy(lg_seq), _greedy(lg_pipe)
+    pipe_b.flush()
+    assert pipe_b.inflight_steps == 0
+    for b, ss in zip(backends, sids):
+        for s, p in zip(ss, prompts):
+            assert b.table(s).num_tokens == len(p) + 4
+        b.release()
+
+
+def test_deferred_commit_lands_one_step_late(model):
+    """sync() returns logits with the KV write-back still pending; the
+    backend's tables advance only at flush/next-dispatch."""
+    cfg, params = model
+    b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                     decode_mode="gather", share_prefixes=False)
+    sid, _, _ = b.new_seq(params, list(range(1, 10)))
+    step = b.dispatch_decode(params, [5], sids=[sid])
+    lg = b.sync(step)
+    assert lg.shape[0] == 1 and step.synced and not step.committed
+    assert b.table(sid).num_tokens == 9       # still the prompt
+    # the NEXT dispatch commits the previous step before launching
+    step2 = b.dispatch_decode(params, _greedy(lg), sids=[sid])
+    assert step.committed and b.table(sid).num_tokens == 10
+    b.sync(step2)
+    b.flush()
+    assert step2.committed and b.table(sid).num_tokens == 11
+    b.release()
+
+
+def test_dispatch_while_inflight_raises(model):
+    cfg, params = model
+    b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                     decode_mode="gather")
+    sid, _, _ = b.new_seq(params, [1, 2, 3, 4, 5])
+    step = b.dispatch_decode(params, [7], sids=[sid])
+    with pytest.raises(RuntimeError, match="already in flight"):
+        b.dispatch_decode(params, [7], sids=[sid])
+    lg = b.sync(step)
+    np.testing.assert_array_equal(np.asarray(b.sync(step)),
+                                  np.asarray(lg))   # sync is idempotent
+    # a step belonging to another backend is rejected by both phases
+    b2 = PagedBackend(cfg, num_blocks=32, block_size=4,
+                      decode_mode="gather")
+    sid2, _, _ = b2.new_seq(params, [1, 2, 3, 4, 5])
+    foreign = b2.dispatch_decode(params, [7], sids=[sid2])
+    with pytest.raises(RuntimeError, match="not in flight"):
+        b.sync(foreign)
+    b2.sync(foreign)
+    with pytest.raises(RuntimeError, match="not pending"):
+        b.commit(foreign)
+    b2.release()
+    b.release()
+
+
+# ---------------------------------------------------------------------------
+# sharded issue-then-gather
+# ---------------------------------------------------------------------------
+
+def test_sharded_dispatch_all_before_sync_any(model):
+    """The sharded pipeline launches EVERY shard's kernel before blocking
+    on any — in the trace, both shards' ``backend.dispatch`` events
+    precede the first ``backend.decode`` sync span."""
+    from repro.obs import Observer
+    cfg, params = model
+    obs = Observer()
+    b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=32, block_size=4,
+                            decode_mode="gather")
+    for i, inner in enumerate(b.backends):
+        inner.obs = obs
+        inner.obs_shard = i
+    sa, _, _ = b.new_seq(params, list(range(1, 8)), shard=0)
+    sb, _, _ = b.new_seq(params, list(range(20, 28)), shard=1)
+    step = b.dispatch_decode(params, [3, 4], sids=[sa, sb])
+    lg = b.sync(step)
+    assert lg.shape[0] == 2
+    b.flush()
+    evs = obs.trace.events()
+    di = [i for i, e in enumerate(evs) if e["ev"] == "backend.dispatch"]
+    si = [i for i, e in enumerate(evs) if e["ev"] == "backend.decode"]
+    ci = [i for i, e in enumerate(evs) if e["ev"] == "backend.commit"]
+    assert {evs[i]["shard"] for i in di} == {0, 1}
+    assert len(si) == len(ci) == 2
+    assert max(di) < min(si), "a shard synced before all shards dispatched"
+    assert max(si) < min(ci), "a shard committed before all shards synced"
+    b.release()
+
+
+def test_sharded_pipelined_matches_sequential(model):
+    cfg, params = model
+    prompts = [list(range(1, 8)), list(range(20, 31)),
+               list(range(40, 45))]
+    backends, sids = [], []
+    for _ in range(2):
+        b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=64,
+                                block_size=4, decode_mode="gather")
+        backends.append(b)
+        sids.append([b.new_seq(params, p, shard=i % 2)[0]
+                     for i, p in enumerate(prompts)])
+    seq_b, pipe_b = backends
+    last_s = last_p = [p[-1] for p in prompts]
+    for _ in range(3):
+        lg_seq = seq_b.decode(params, sids[0], last_s)
+        pipe_b.flush()
+        step = pipe_b.dispatch_decode(params, last_p, sids=sids[1])
+        lg_pipe = pipe_b.sync(step)
+        np.testing.assert_array_equal(np.asarray(lg_seq),
+                                      np.asarray(lg_pipe))
+        last_s, last_p = _greedy(lg_seq), _greedy(lg_pipe)
+    for b in backends:
+        b.release()
+
+
+# ---------------------------------------------------------------------------
+# flush barriers: fork / free / release
+# ---------------------------------------------------------------------------
+
+def test_fork_mid_stream_forces_flush_barrier(model):
+    """fork_seq on a backend with a deferred write-back must flush first:
+    the CoW fork sees the committed KV, and both lanes keep decoding the
+    tokens a fully sequential twin produces."""
+    cfg, params = model
+    prompt = list(range(1, 10))
+    pipe = PagedBackend(cfg, num_blocks=64, block_size=4,
+                        decode_mode="gather", share_prefixes=False)
+    seq = PagedBackend(cfg, num_blocks=64, block_size=4,
+                       decode_mode="gather", share_prefixes=False)
+    ps, _, _ = pipe.new_seq(params, prompt)
+    ss, _, _ = seq.new_seq(params, prompt)
+    # pipelined: leave the step's write-back pending, then fork
+    step = pipe.dispatch_decode(params, [5], sids=[ps])
+    tok_p = _greedy(pipe.sync(step))
+    assert pipe.table(ps).num_tokens == 9     # deferred...
+    pf = pipe.fork_seq(ps)
+    assert step.committed and pipe.inflight_steps == 0
+    assert pipe.table(ps).num_tokens == 10    # ...until the fork barrier
+    assert pipe.table(pf).num_tokens == 10
+    # sequential twin: committed decode, then fork
+    tok_s = _greedy(seq.decode(params, [ss], [5]))
+    sf = seq.fork_seq(ss)
+    assert tok_p == tok_s
+    last_p, last_s = tok_p * 2, tok_s * 2     # both lanes advance
+    for _ in range(3):
+        pipe.flush()
+        st2 = pipe.dispatch_decode(params, last_p, sids=[ps, pf])
+        last_p = _greedy(pipe.sync(st2))
+        last_s = _greedy(seq.decode(params, [ss, sf], last_s))
+        assert last_p == last_s
+    pipe.release()
+    seq.release()
+
+
+def test_free_seq_drains_pending_write_back(model):
+    cfg, params = model
+    b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                     decode_mode="gather", share_prefixes=False)
+    s1, _, _ = b.new_seq(params, list(range(1, 9)))
+    s2, _, _ = b.new_seq(params, list(range(20, 26)))
+    step = b.dispatch_decode(params, [3, 4], sids=[s1, s2])
+    b.sync(step)
+    b.free_seq(s1)                # flush barrier, then the free
+    assert step.committed
+    assert b.table(s2).num_tokens == 7        # s2's token committed
+    b.pool.check_invariants()
+    b.release()
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_release_drains_pending_write_back(model, sharded):
+    """Regression (flush ordered against release): a backend released
+    with a deferred write-back commits it — on_alloc fires, the step
+    handle reads committed — before the storage is dropped; flush()
+    afterwards still raises the released error."""
+    cfg, params = model
+    if sharded:
+        b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=32,
+                                block_size=4, decode_mode="gather")
+        sid, _, _ = b.new_seq(params, list(range(1, 9)), shard=1)
+    else:
+        b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                         decode_mode="gather", share_prefixes=False)
+        sid, _, _ = b.new_seq(params, list(range(1, 9)))
+    allocs = []
+    # 8-token prompt, block_size 4: the tail block is full, so the
+    # deferred commit must allocate — observable through on_alloc
+    step = b.dispatch_decode(params, [5], sids=[sid],
+                             on_alloc=lambda s, n: allocs.append((s, n)))
+    b.sync(step)
+    assert not step.committed and allocs == []
+    b.release()
+    assert step.committed and allocs == [(sid, 1)]
+    with pytest.raises(RuntimeError, match="released"):
+        b.flush()
+    with pytest.raises(RuntimeError, match="released"):
+        b.dispatch_decode(params, [5], sids=[sid])
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_flush_is_idempotent(model, sharded):
+    cfg, params = model
+    if sharded:
+        b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=32,
+                                block_size=4, decode_mode="gather")
+    else:
+        b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                         decode_mode="gather")
+    sid, _, _ = b.new_seq(params, [1, 2, 3, 4, 5])
+    b.flush()                                  # nothing outstanding: no-op
+    step = b.dispatch_decode(params, [7], sids=[sid])
+    b.flush()                                  # syncs AND commits
+    assert step.synced and step.committed
+    n = b.table(sid).num_tokens
+    b.flush()                                  # second flush: no-op
+    b.flush()
+    assert b.table(sid).num_tokens == n == 6
+    assert b.inflight_steps == 0
+    b.release()
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion with work in flight
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_rolls_back_with_pending_step(model):
+    """Dispatch first drains the pending commit (capacity can only grow
+    between dispatch and commit), then prechecks capacity BEFORE any
+    side effect: on exhaustion the pending step's write-back has landed,
+    nothing is in flight, and the pool is untouched and serviceable."""
+    cfg, params = model
+    b = PagedBackend(cfg, num_blocks=5, block_size=4,
+                     decode_mode="gather", share_prefixes=False)
+    sa, _, _ = b.new_seq(params, list(range(1, 9)))     # 2 blocks
+    sb, _, _ = b.new_seq(params, list(range(20, 28)))   # 2 blocks
+    step = b.dispatch_decode(params, [5], sids=[sa])    # needs the last
+    b.sync(step)                                        # free block
+    free0 = b.pool.num_free
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        # drains sa's commit (takes the last block), then sb's full tail
+        # has nowhere to grow
+        b.dispatch_decode(params, [5, 6], sids=[sa, sb])
+    assert step.committed and b.table(sa).num_tokens == 9
+    assert b.inflight_steps == 0
+    assert b.pool.num_free == 0 and free0 == 1
+    b.pool.check_invariants()
+    b.free_seq(sb)                     # capacity returns; decode resumes
+    lg = b.decode(params, [sa], [5])
+    assert lg.shape[0] == 1
+    b.release()
+
+
+def test_sharded_exhaustion_is_all_or_nothing(model):
+    """Cross-shard capacity precheck runs before ANY shard dispatches:
+    when one shard is exhausted, no shard launches and no shard is left
+    holding an in-flight step."""
+    cfg, params = model
+    b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=4, block_size=4,
+                            decode_mode="gather")
+    sa, _, _ = b.new_seq(params, [1, 2, 3, 4], shard=0)        # 1 block
+    sb, _, _ = b.new_seq(params, list(range(20, 28)), shard=1)  # 2 = all
+    with pytest.raises(RuntimeError, match="pool exhausted on shard 1"):
+        b.dispatch_decode(params, [5, 6], sids=[sa, sb])
+    assert b.inflight_steps == 0
+    assert all(inner.inflight_steps == 0 for inner in b.backends)
+    b.pool.check_invariants()
+    lg = b.decode(params, [sa], [5])   # the healthy shard still serves
+    assert lg.shape[0] == 1
+    b.release()
+
+
+# ---------------------------------------------------------------------------
+# dense backend lifecycle + construction surface
+# ---------------------------------------------------------------------------
+
+def test_dense_split_phase_lifecycle(model):
+    cfg, params = model
+    be = make_backend(cfg, "dense", batch=1, max_seq=16)
+    be.prefill(params, jnp.asarray([[1, 2, 3, 4]], jnp.int32))
+    with pytest.raises(ValueError, match="sids"):
+        be.dispatch_decode(params, jnp.ones((1, 1), jnp.int32),
+                           sids=[0])
+    step = be.dispatch_decode(params, jnp.ones((1, 1), jnp.int32))
+    assert be.inflight_steps == 0      # dense never defers
+    lg = be.sync(step)
+    assert step.synced and step.committed and lg.shape[0] == 1
+    be.commit(step)                    # no-ops, in any order
+    be.flush()
+    be.release()
+    with pytest.raises(RuntimeError, match="released"):
+        be.flush()
+
+
+def test_make_backend_routes_shards(model):
+    cfg, _ = model
+    b = make_backend(cfg, "paged", shards=2, num_blocks=32, block_size=4,
+                     decode_mode="gather")
+    assert isinstance(b, ShardedPagedBackend)
+    assert b.pool.n_shards == 2
+    b.release()
+    b1 = make_backend(cfg, "paged", shards=1, num_blocks=16, block_size=4)
+    assert isinstance(b1, PagedBackend)
+    b1.release()
+    with pytest.raises(ValueError, match="devices"):
+        make_backend(cfg, "sharded-paged", device="cpu:0")
+
+
+def test_positional_pool_construction_deprecated(model):
+    cfg, _ = model
+    donor = PagedBackend(cfg, num_blocks=16, block_size=4)
+    pool = donor.pool
+    with pytest.warns(DeprecationWarning, match="positionally"):
+        b = PagedBackend(cfg, pool)
+    b.release()
+    with pytest.raises(TypeError, match="at most one pool"):
+        PagedBackend(cfg, pool, pool=pool)
+    donor.release()
+
+
+def test_dense_kv_compat_reads_deprecated(model):
+    cfg, params = model
+    be = DenseBackend(cfg, 1, 8)
+    be.prefill(params, jnp.asarray([[1, 2, 3]], jnp.int32))
+    with pytest.warns(DeprecationWarning, match="README"):
+        _ = be.k
+    with pytest.warns(DeprecationWarning, match="README"):
+        _ = be.v
+    be.release()
+
+
+# ---------------------------------------------------------------------------
+# property: flush placement never changes tokens
+# ---------------------------------------------------------------------------
+
+if st is not None:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(1, 3),                     # decode steps
+           st.sampled_from([1, 2]),               # shard count
+           st.sampled_from(["gather", "kernel"]),  # decode mode
+           st.integers(0, 10_000))                # flush-placement seed
+    def test_flush_placement_never_changes_tokens(n_steps, n_shards,
+                                                  decode_mode, seed):
+        """flush() is a pure barrier: sprinkling it anywhere in the
+        dispatch/sync stream (or nowhere — the next dispatch commits)
+        yields exactly the synchronous wrapper's tokens."""
+        cfg = configs.get_smoke(ARCH)
+        params = lm.init(cfg, jax.random.key(0)).params
+        rng = np.random.default_rng(seed)
+        prompts = [[int(t) for t in rng.integers(1, cfg.vocab, ln)]
+                   for ln in rng.integers(5, 13, size=2)]
+
+        def build():
+            if n_shards == 1:
+                b = PagedBackend(cfg, num_blocks=32, block_size=4,
+                                 decode_mode=decode_mode,
+                                 share_prefixes=False)
+                sids = [b.new_seq(params, p)[0] for p in prompts]
+            else:
+                b = ShardedPagedBackend(cfg, n_shards=2, num_blocks=64,
+                                        block_size=4,
+                                        decode_mode=decode_mode)
+                sids = [b.new_seq(params, p, shard=i % 2)[0]
+                        for i, p in enumerate(prompts)]
+            return b, sids
+
+        ref_b, ref_sids = build()
+        pipe_b, pipe_sids = build()
+        last_r = last_p = [p[-1] for p in prompts]
+        for _ in range(n_steps):
+            last_r = _greedy(ref_b.decode(params, ref_sids, last_r))
+            if rng.random() < 0.5:
+                pipe_b.flush()                   # maybe a pre-barrier
+            step = pipe_b.dispatch_decode(params, last_p, sids=pipe_sids)
+            lg = pipe_b.sync(step)
+            for _ in range(int(rng.integers(0, 3))):
+                pipe_b.flush()                   # 0..2 post-barriers
+            last_p = _greedy(lg)
+            assert last_p == last_r
+        pipe_b.flush()
+        for rs, ps in zip(ref_sids, pipe_sids):
+            assert ref_b.table(rs).num_tokens \
+                == pipe_b.table(ps).num_tokens
+        ref_b.release()
+        pipe_b.release()
+else:
+    def test_flush_placement_never_changes_tokens():
+        pytest.importorskip("hypothesis")

@@ -24,7 +24,17 @@ Checks, all offline:
     in the trace — every ``tier.promote`` key was demoted earlier on the
     same shard (tiers start empty, so promotion without a prior demotion
     is a bookkeeping bug), and a ``backend.decode`` follows a promotion
-    (promoted pages re-enter decode through the staged mirror).
+    (promoted pages re-enter decode through the staged mirror);
+  * split-phase decode-pipeline telemetry (``--require-pipeline``, the
+    CI pipelined-serve smoke's mode): the
+    ``engine.{dispatch,sync,commit}_ms`` phase histograms counted work
+    and the ``backend.inflight_steps`` gauge exists; and per shard, by
+    trace order, every decode step's ``backend.dispatch`` precedes its
+    ``backend.decode`` sync span, its ``backend.commit`` lands after the
+    sync and before the next step's dispatch, and at least one commit
+    has an ``engine.token`` strictly between its sync and itself — the
+    engine sampled a token whose KV write-back was still deferred, i.e.
+    the commit lag is exactly one step.
 
 Exits non-zero listing every violation.
 """
@@ -217,12 +227,103 @@ def check_tier_trace(lines: list, require_tiers: bool) -> list:
     return bad
 
 
+def check_pipeline_snapshot(snap: dict) -> list:
+    """Split-phase engine telemetry: the three phase histograms counted
+    work and the pipeline-depth gauge exists."""
+    bad = []
+    for name in ("engine.dispatch_ms", "engine.sync_ms",
+                 "engine.commit_ms"):
+        hist = snap.get("histograms", {}).get(name)
+        if hist is None or hist.get("count", 0) <= 0:
+            bad.append(f"snapshot: --require-pipeline but {name} "
+                       "histogram missing or empty")
+    depth = snap.get("gauges", {}).get("backend.inflight_steps")
+    if depth is None:
+        bad.append("snapshot: --require-pipeline but no "
+                   "backend.inflight_steps gauge")
+    elif not 0 <= depth <= 2:
+        bad.append(f"snapshot: backend.inflight_steps out of range: "
+                   f"{depth}")
+    return bad
+
+
+def check_pipeline_trace(lines: list) -> list:
+    """Dispatch-before-sync ordering and the one-step commit lag, by
+    trace order (entry-timestamp sorted, the file's order) per shard.
+
+    For every decode step k on a shard: ``backend.dispatch`` (k) must
+    precede the ``backend.decode`` sync span (k); ``backend.commit`` (k)
+    must land after the sync and before dispatch (k+1).  At least one
+    commit must have an ``engine.token`` strictly between its sync and
+    itself: the engine consumed a token whose KV write-back was still
+    deferred — the pipelined lag is exactly one step.
+    """
+    bad = []
+    events = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue                 # check_trace already reported it
+    token_idx = [i for i, ev in enumerate(events)
+                 if ev.get("ev") == "engine.token"]
+    # (shard, step) -> global trace index per pipeline event kind
+    idx: dict = {"backend.dispatch": {}, "backend.decode": {},
+                 "backend.commit": {}}
+    shards = set()
+    for i, ev in enumerate(events):
+        kind = ev.get("ev")
+        if kind in idx and "step" in ev:
+            idx[kind].setdefault((ev.get("shard"), ev["step"]), i)
+            shards.add(ev.get("shard"))
+    if not idx["backend.dispatch"]:
+        bad.append("trace: --require-pipeline but no backend.dispatch "
+                   "events (pipelined decode never ran)")
+        return bad
+    lagged = 0
+    for (shard, step), di in sorted(idx["backend.dispatch"].items(),
+                                    key=lambda kv: kv[1]):
+        si = idx["backend.decode"].get((shard, step))
+        ci = idx["backend.commit"].get((shard, step))
+        ni = idx["backend.dispatch"].get((shard, step + 1))
+        if si is None:
+            bad.append(f"trace: step {step} shard {shard} dispatched "
+                       "but never synced")
+            continue
+        if si < di:
+            bad.append(f"trace: step {step} shard {shard} sync span "
+                       "precedes its dispatch")
+        if ci is None:
+            bad.append(f"trace: step {step} shard {shard} synced but "
+                       "never committed (flush lost the write-back)")
+            continue
+        if ci < si:
+            bad.append(f"trace: step {step} shard {shard} commit "
+                       "precedes its sync")
+        if ni is not None and ci > ni:
+            bad.append(f"trace: step {step} shard {shard} commit after "
+                       f"step {step + 1}'s dispatch (lag exceeded one "
+                       "step)")
+        if any(si < t < ci for t in token_idx):
+            lagged += 1
+    if lagged == 0:
+        bad.append("trace: no commit has an engine.token between its "
+                   "sync and itself — write-back was never deferred "
+                   "across a token (pipeline off?)")
+    return bad
+
+
 def main(argv: list) -> int:
     require_tiers = "--require-tiers" in argv
-    argv = [a for a in argv if a != "--require-tiers"]
+    require_pipeline = "--require-pipeline" in argv
+    argv = [a for a in argv
+            if a not in ("--require-tiers", "--require-pipeline")]
     if len(argv) != 2:
         print("usage: check_metrics.py <metrics.json> <trace.jsonl> "
-              "[--require-tiers]", file=sys.stderr)
+              "[--require-tiers] [--require-pipeline]", file=sys.stderr)
         return 2
     snap_path, trace_path = argv
     failures = []
@@ -234,6 +335,8 @@ def main(argv: list) -> int:
     if snap is not None:
         failures.extend(check_snapshot(snap))
         failures.extend(check_tier_snapshot(snap, require_tiers))
+        if require_pipeline:
+            failures.extend(check_pipeline_snapshot(snap))
     try:
         lines = open(trace_path, encoding="utf-8").readlines()
     except OSError as e:
@@ -242,6 +345,8 @@ def main(argv: list) -> int:
     if lines is not None:
         failures.extend(check_trace(lines))
         failures.extend(check_tier_trace(lines, require_tiers))
+        if require_pipeline:
+            failures.extend(check_pipeline_trace(lines))
     for msg in failures:
         print(f"[metrics] BAD {msg}", file=sys.stderr)
     if failures:
