@@ -1,0 +1,34 @@
+"""Protocol sanitizer suite: static lint, pipeline race detection,
+refcount shadow accounting.
+
+The serving stack's correctness now rests on invariants that reorder
+*time*, not just addresses: the one-step-lagged KV write-back, the
+single-consumer dirty-staging contract, flush barriers in front of every
+fork/free/prefill/release, and Pallas fetch gates that must live in
+BlockSpec index maps.  Those invariants live in docstrings; this package
+makes them machine-checked:
+
+  ``analysis.lint``    AST-based repo-specific lint pass (never imports
+                       the checked code) — run via ``tools/lint.py``.
+  ``analysis.races``   happens-before model of the ``DecodeStep``
+                       lifecycle: exhaustive in-process interleaving
+                       exploration plus offline replay of ``obs``
+                       TraceLog JSONL (what ``tools/check_metrics.py
+                       --require-pipeline`` drives).
+  ``analysis.refsan``  opt-in ``BlockPool`` shadow refcount sanitizer:
+                       leaks, double-frees and use-after-free with
+                       call-site provenance.
+
+See ``docs/ANALYSIS.md`` for the rule catalogue and usage.
+"""
+import importlib
+
+__all__ = ["lint", "races", "refsan"]
+
+
+def __getattr__(name):
+    # lazy submodule access (keeps `python -m repro.analysis.races`
+    # runnable without a double-import warning)
+    if name in __all__:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(name)

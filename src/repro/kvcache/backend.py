@@ -1027,6 +1027,7 @@ class PagedBackend:
         batch, freeing any lanes a prior call created.  Returns
         last-position logits (B, 1, V)."""
         self._check_released()
+        self.flush()    # barrier: lagged write-back lands before re-batch
         assert frontend_emb is None, "paged backend has no frontend state"
         old, self._batch = self._batch, []
         for sid in old:              # re-prefill replaces the batch lanes
@@ -1205,6 +1206,9 @@ class ShardedPagedBackend:
         every block of the sequence lives in ``pool.shards[shard]``.
         """
         self._check_released()
+        # barrier across *all* shards (the inner new_seq only flushes its
+        # own) so admission reads post-commit pool state everywhere
+        self.flush()
         if shard is None:
             shard = self.pool.least_loaded()
         assert 0 <= shard < self.pool.n_shards, shard

@@ -320,6 +320,18 @@ class BlockPool:
             self.obs.trace.event("pool.cow", src=src, dst=dst,
                                  shard=self.obs_shard)
 
+    def forget_dirty(self, bid: int) -> None:
+        """Drop a block from the dirty-staging set without draining.
+
+        For owners that invalidate a block's pending payload out of band
+        (e.g. ``kvcache.tiers.TierManager`` capturing a demoted block's
+        KV before the slot is reused) — everyone else goes through
+        ``write_kv``/``copy_block``/``drain_dirty`` and must never touch
+        ``dirty`` directly (enforced by ``tools/lint.py``,
+        rule ``pool-kv-mutation``).
+        """
+        self.dirty.discard(bid)
+
     def drain_dirty(self) -> list[int]:
         """Block ids whose payload changed since the last drain (sorted),
         clearing the set.

@@ -244,7 +244,7 @@ class TierManager:
             self._demote(bid, key)
         # pending payload of an evicted block must not be re-staged: the
         # demotion above captured the freshest copy; the slot is free
-        self.pool.dirty.discard(bid)
+        self.pool.forget_dirty(bid)
         if self._chain is not None:
             self._chain(bid)       # prefix cache unregisters the block
         self._publish()
@@ -365,9 +365,9 @@ class TierManager:
         for i in order:
             dst, entry, level = pend[i]
             if pool.k_pages is not None:
-                pool.k_pages[:, dst] = entry.k
-                pool.v_pages[:, dst] = entry.v
-                pool.dirty.add(dst)
+                # full-block copy-in through the sanctioned write path so
+                # the dirty-staging contract marks dst for the mirror
+                pool.write_kv(dst, 0, entry.k, entry.v)
             self.prefix.register(entry.key, dst, pool)
             tier_bytes[level] = tier_bytes.get(level, 0) + entry.nbytes
             self.stats.promotes += 1

@@ -1,0 +1,12 @@
+"""BAD: deprecated concrete-Cache reads on a backend handle."""
+
+
+def cache_bytes(cfg, lm, params):
+    be = lm.init_cache(cfg, batch=2, max_seq=16)
+    total = be.k.nbytes + be.v.nbytes           # deprecated compat reads
+    return total
+
+
+def dense_peek(cfg, DenseBackend):
+    be = DenseBackend(cfg, 1, 8)
+    return be.k.shape

@@ -1,0 +1,6 @@
+"""BAD (when placed under src/): a second drain_dirty consumer."""
+
+
+def steal_staging(pool):
+    # the owning backend's mirror drains; this steals its dirty stream
+    return pool.drain_dirty()

@@ -1,0 +1,25 @@
+"""BAD: pipelined backend mutates state before the flush barrier."""
+
+
+class RacyBackend:
+    def _commit_pending(self):
+        pass
+
+    def flush(self):
+        self._commit_pending()
+
+    def fork_seq(self, sid):
+        src = self._seqs[sid]               # reads are fine...
+        self._seqs[99] = src                # ...but this store races the
+        self.flush()                        # lagged write-back
+        return 99
+
+    def free_seq(self, sid):
+        self._n -= 1                        # bookkeeping before draining
+        seq = self._seqs.pop(sid)
+        self.flush()
+        return seq
+
+    def release(self):
+        self._seqs = {}                     # never drains the pipeline
+        self._released = True

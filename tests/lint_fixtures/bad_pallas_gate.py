@@ -1,0 +1,20 @@
+"""BAD: pl.when bounds guard, but the table-driven index map never
+clamps — the pipeline still DMAs whatever block the map names."""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(pt_ref, kv_ref, o_ref, *, n_pages):
+    j = pl.program_id(1)
+
+    @pl.when(j < n_pages)               # compute-only gate: fetch not elided
+    def _():
+        o_ref[...] += kv_ref[...]
+
+
+def build_specs(pt):
+    kv_spec = pl.BlockSpec(
+        (1, 1, 8, 1, 1),
+        lambda b, j, pt_ref: (0, pt_ref[b, j], 0, 0, 0),   # unclamped
+    )
+    return kv_spec

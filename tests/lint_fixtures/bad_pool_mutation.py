@@ -1,0 +1,15 @@
+"""BAD: mutates pool KV payload / dirty set outside BlockPool."""
+
+
+def sneaky_promote(pool, dst, k, v):
+    pool.k_pages[:, dst] = k        # bypasses the dirty-staging contract
+    pool.v_pages[:, dst] = v
+    pool.dirty.add(dst)
+
+
+def sneaky_forget(pool, bid):
+    pool.dirty.discard(bid)
+
+
+def sneaky_reset(pool):
+    pool.dirty = set()

@@ -1,0 +1,8 @@
+"""BAD: legacy positional pool construction."""
+
+
+def build(cfg, pool):
+    from repro.kvcache.backend import PagedBackend, ShardedPagedBackend
+    a = PagedBackend(cfg, pool)                 # deprecated signature
+    b = ShardedPagedBackend(cfg, pool, 2)       # ditto
+    return a, b

@@ -1,0 +1,13 @@
+"""OK: per-layer accessor and the documented pytree escape hatch."""
+
+
+def cache_bytes(cfg, lm):
+    be = lm.init_cache(cfg, batch=2, max_seq=16)
+    k0, v0 = be.kv_for_layer(0)
+    total = be.cache.k.nbytes                   # backend.cache.* is the
+    return k0.nbytes + v0.nbytes + total        # sanctioned pytree read
+
+
+def unrelated(record):
+    # .k on something that is not a backend handle is untouched
+    return record.k + record.v

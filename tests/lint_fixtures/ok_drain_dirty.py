@@ -1,0 +1,9 @@
+"""OK (even under src/): observing dirty without draining it."""
+
+
+def peek_staging(pool):
+    return sorted(pool.dirty) if hasattr(pool, "dirty") else []
+
+
+def pending_count(pool):
+    return len(pool.dirty)

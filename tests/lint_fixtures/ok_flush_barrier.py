@@ -1,0 +1,49 @@
+"""OK: every lifecycle entry point drains the pipeline first."""
+
+
+class SafeBackend:
+    def _commit_pending(self):
+        pass
+
+    def _check_released(self):
+        pass
+
+    def flush(self):
+        self._commit_pending()
+
+    def fork_seq(self, sid):
+        self._check_released()
+        self.flush()
+        self._seqs[99] = self._seqs[sid]
+        return 99
+
+    def free_seq(self, sid):
+        self._check_released()
+        self.flush()
+        return self._seqs.pop(sid)
+
+    def prefill(self, params, tokens):
+        self._check_released()
+        self.flush()
+        self._batch = []
+        return self._add_seqs(params, tokens)
+
+    def new_seq(self, params, prompt):
+        return self._add_seqs(params, [prompt])   # delegate flushes
+
+    def _add_seqs(self, params, tokens):
+        self.flush()
+        self._batch = list(tokens)
+        return self._batch
+
+    def release(self):
+        if not self._released:
+            self._commit_pending()
+        self._released = True
+
+
+class UnpipelinedBackend:
+    # no _commit_pending -> no pipeline, the rule does not apply
+    def prefill(self, params, tokens):
+        self._batch = list(tokens)
+        return self._batch

@@ -1,0 +1,28 @@
+"""OK: payload writes go through BlockPool's own write paths."""
+
+
+class BlockPool:
+    def __init__(self, n):
+        self.k_pages = self.v_pages = None
+        self.dirty = set()
+
+    def write_kv(self, bid, offset, k, v):
+        self.k_pages[:, bid] = k
+        self.v_pages[:, bid] = v
+        self.dirty.add(bid)
+
+    def forget_dirty(self, bid):
+        self.dirty.discard(bid)
+
+    def drain_dirty(self):
+        out = sorted(self.dirty)
+        self.dirty.clear()
+        return out
+
+
+def promote(pool, dst, k, v):
+    pool.write_kv(dst, 0, k, v)     # the sanctioned copy-in
+
+
+def forget(pool, bid):
+    pool.forget_dirty(bid)

@@ -1,0 +1,9 @@
+"""OK: keyword pools and the make_backend registry constructor."""
+
+
+def build(cfg, pool):
+    from repro.kvcache.backend import PagedBackend, make_backend
+    a = PagedBackend(cfg, pool=pool)
+    b = make_backend(cfg, "paged", num_blocks=16, block_size=4)
+    c = PagedBackend(cfg)                       # one positional arg is fine
+    return a, b, c

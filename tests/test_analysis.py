@@ -1,0 +1,368 @@
+"""Protocol sanitizer suite self-tests: lint rules against the fixture
+corpus (and the shipped tree), the decode-pipeline race detector in both
+in-process and trace-replay modes, and the refcount sanitizer."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.races import (Ev, analyze_trace, check_history,
+                                  interleavings, shard_chain)
+from repro.analysis import refsan
+from repro.kvcache.pool import BlockPool, PoolConfig
+from repro.kvcache.sharded_pool import ShardedBlockPool
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tests", "lint_fixtures")
+
+# rule -> (bad fixture, ok fixture, relpath the fixture pretends to be at)
+CORPUS = {
+    "pool-kv-mutation": ("bad_pool_mutation.py", "ok_pool_mutation.py", None),
+    "flush-barrier": ("bad_flush_barrier.py", "ok_flush_barrier.py", None),
+    "pallas-fetch-gate": ("bad_pallas_gate.py", "ok_pallas_gate.py", None),
+    "positional-pool": ("bad_positional_pool.py", "ok_positional_pool.py",
+                        None),
+    "dense-kv-read": ("bad_dense_read.py", "ok_dense_read.py", None),
+    "drain-dirty-consumer": ("bad_drain_dirty.py", "ok_drain_dirty.py",
+                             "src/repro/fake/{name}"),
+}
+
+
+def _lint_fixture(name, rel_tmpl):
+    path = os.path.join(FIXTURES, name)
+    rel = rel_tmpl.format(name=name) if rel_tmpl else path
+    return lint.lint_file(path, rel)
+
+
+# ---------------------------------------------------------------------------
+# lint: fixture corpus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", sorted(CORPUS))
+def test_bad_fixture_trips_exactly_its_rule(rule):
+    bad, _, rel = CORPUS[rule]
+    findings = _lint_fixture(bad, rel)
+    assert findings, f"{bad} should trip {rule}"
+    assert {f.rule for f in findings} == {rule}
+    # findings are anchored: real line numbers and a str() rendering a
+    # CI annotation can point at
+    for f in findings:
+        assert f.line > 0
+        assert f"[{rule}]" in str(f)
+
+
+@pytest.mark.parametrize("rule", sorted(CORPUS))
+def test_ok_fixture_is_clean(rule):
+    _, ok, rel = CORPUS[rule]
+    assert _lint_fixture(ok, rel) == []
+
+
+def test_every_rule_has_corpus_coverage():
+    assert set(CORPUS) == set(lint.RULES)
+
+
+def test_suppression_pragma_silences_one_rule():
+    src = "def f(pool, bid):\n    pool.dirty.discard(bid)\n"
+    assert len(lint.lint_source(src, "x.py")) == 1
+    ok = ("def f(pool, bid):\n"
+          "    pool.dirty.discard(bid)  # lint: ok(pool-kv-mutation)\n")
+    assert lint.lint_source(ok, "x.py") == []
+    wrong = ("def f(pool, bid):\n"
+             "    pool.dirty.discard(bid)  # lint: ok(dense-kv-read)\n")
+    assert len(lint.lint_source(wrong, "x.py")) == 1
+
+
+def test_shipped_tree_lints_clean():
+    findings = lint.lint_paths(["src", "tests"], ROOT)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_json_summary_and_exit_codes(tmp_path):
+    out = tmp_path / "lint.json"
+    # the bad corpus through the CLI: nonzero exit + machine-readable
+    # summary (bench --json conventions)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "lint.py"),
+         os.path.join(FIXTURES, "bad_positional_pool.py"),
+         "--json", str(out)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    summary = json.loads(out.read_text())
+    assert summary["ok"] is False
+    assert summary["counts"] == {"positional-pool": 2}
+    assert all({"path", "line", "col", "rule", "msg"} <= set(f)
+               for f in summary["findings"])
+    # clean input: exit 0, ok summary
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "lint.py"),
+         os.path.join(FIXTURES, "ok_positional_pool.py"),
+         "--json", str(out)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0
+    assert json.loads(out.read_text())["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# race detector: in-process interleaving exploration
+# ---------------------------------------------------------------------------
+
+def test_legal_chains_accept_every_interleaving():
+    c0, c1 = shard_chain(0, 2), shard_chain(1, 2)
+    n = 0
+    for il in interleavings(c0, c1):
+        n += 1
+        assert check_history(il) == []
+    # C(16, 8): both chains' relative orders preserved, all merges seen
+    assert n == 12870
+
+
+def test_seeded_commit_before_sync_caught_in_every_interleaving():
+    c0, c1 = shard_chain(0, 2), shard_chain(1, 1)
+    mut = list(c0)
+    si = next(i for i, e in enumerate(mut)
+              if e.kind == "sync" and e.step == 1)
+    ci = next(i for i, e in enumerate(mut)
+              if e.kind == "commit" and e.step == 1)
+    mut[si], mut[ci] = mut[ci], mut[si]
+    seen = 0
+    for il in interleavings(mut, c1):
+        seen += 1
+        codes = {v.code for v in check_history(il)}
+        assert "commit-before-sync" in codes
+    assert seen > 100
+
+
+def test_seeded_fork_without_flush_caught_in_every_interleaving():
+    c0, c1 = shard_chain(0, 2), shard_chain(1, 1)
+    mut = list(c0)
+    si = next(i for i, e in enumerate(mut)
+              if e.kind == "sync" and e.step == 1)
+    mut.insert(si, Ev("fork", 0))        # fork lands mid-step: no barrier
+    for il in interleavings(mut, c1):
+        codes = {v.code for v in check_history(il)}
+        assert "barrier-missed" in codes
+
+
+def test_barrier_between_steps_is_legal():
+    evs = shard_chain(0, 1) + [Ev("fork", 0), Ev("free", 0)] \
+        + [Ev("dispatch", 0, 1), Ev("sync", 0, 1), Ev("commit", 0, 1)]
+    assert check_history(evs) == []
+
+
+def test_double_dispatch_and_lag_exceeded():
+    evs = [Ev("dispatch", 0, 0), Ev("dispatch", 0, 1)]
+    assert {v.code for v in check_history(evs)} >= {"double-dispatch"}
+    evs = [Ev("dispatch", 0, 0), Ev("sync", 0, 0), Ev("dispatch", 0, 1),
+           Ev("sync", 0, 1)]
+    assert any(v.code == "lag-exceeded" for v in check_history(evs))
+
+
+def test_lost_commit_flagged_at_stream_end():
+    evs = [Ev("dispatch", 0, 0), Ev("sync", 0, 0)]
+    assert [v.code for v in check_history(evs)] == ["lost-commit"]
+
+
+def test_issue_then_gather_round_ordering():
+    good = [Ev("dispatch", 0, 0, round=0), Ev("dispatch", 1, 0, round=0),
+            Ev("sync", 0, 0, round=0), Ev("sync", 1, 0, round=0),
+            Ev("commit", 0, 0), Ev("commit", 1, 0)]
+    assert check_history(good) == []
+    # shard 0 gathered before shard 1's kernel was issued
+    bad = [Ev("dispatch", 0, 0, round=0), Ev("sync", 0, 0, round=0),
+           Ev("dispatch", 1, 0, round=0), Ev("sync", 1, 0, round=0),
+           Ev("commit", 0, 0), Ev("commit", 1, 0)]
+    assert any(v.code == "gather-before-issue"
+               for v in check_history(bad))
+
+
+# ---------------------------------------------------------------------------
+# race detector: trace replay
+# ---------------------------------------------------------------------------
+
+def _trace(steps=3, shard=0, t0=0):
+    """A legal pipelined TraceLog slice: commit of step k emitted at
+    dispatch of step k+1 (the one-step lag), token after each sync."""
+    evs, ts = [], t0
+    for k in range(steps):
+        if k > 0:
+            evs.append({"ts": ts, "ev": "backend.commit", "shard": shard,
+                        "step": k - 1})
+            ts += 1
+        evs.append({"ts": ts, "ev": "backend.dispatch", "shard": shard,
+                    "step": k}); ts += 1
+        evs.append({"ts": ts, "ev": "backend.decode", "shard": shard,
+                    "step": k, "dur_us": 1}); ts += 2
+        evs.append({"ts": ts, "ev": "engine.token", "rid": 0}); ts += 1
+    evs.append({"ts": ts, "ev": "backend.commit", "shard": shard,
+                "step": steps - 1})
+    return evs
+
+
+def _lines(evs):
+    return [json.dumps(e) for e in evs]
+
+
+def test_replay_accepts_legal_pipelined_trace():
+    report = analyze_trace(_lines(_trace()), require_pipeline=True)
+    assert report.ok, [v.msg for v in report.violations]
+    assert report.stats["lag_tokens"] >= 1
+    assert json.loads(report.to_json())["ok"] is True
+
+
+def test_replay_catches_timestamp_level_commit_before_sync():
+    evs = _trace()
+    sync1 = next(e for e in evs if e["ev"] == "backend.decode"
+                 and e["step"] == 1)
+    commit1 = next(e for e in evs if e["ev"] == "backend.commit"
+                   and e["step"] == 1)
+    commit1["ts"] = sync1["ts"] - 1      # write-back ahead of its logits
+    report = analyze_trace(_lines(evs), require_pipeline=True)
+    assert any(v.code == "commit-before-sync" for v in report.violations)
+
+
+def test_replay_catches_prefill_inside_undrained_pipeline():
+    evs = _trace()
+    sync1 = next(e for e in evs if e["ev"] == "backend.decode"
+                 and e["step"] == 1)
+    evs.append({"ts": sync1["ts"] + 1, "ev": "backend.prefill",
+                "shard": 0, "dur_us": 0})
+    report = analyze_trace(_lines(evs))
+    assert any(v.code == "barrier-missed" for v in report.violations)
+
+
+def test_replay_tolerates_ring_buffer_truncation():
+    evs = _trace(steps=4)
+    # ring overflow dropped the head: stream starts mid-step
+    report = analyze_trace(_lines(evs[4:]), require_pipeline=True)
+    assert report.ok, [v.msg for v in report.violations]
+
+
+def test_replay_require_pipeline_distinguishes_off_from_sequential():
+    # no dispatch events at all -> pipeline never ran
+    report = analyze_trace(_lines([{"ts": 0, "ev": "engine.token",
+                                    "rid": 0}]), require_pipeline=True)
+    assert [v.code for v in report.violations] == ["no-pipeline"]
+    # dispatches but every token outside the sync->commit window ->
+    # write-back never lagged
+    evs = []
+    ts = 0
+    for k in range(2):
+        evs.append({"ts": ts, "ev": "backend.dispatch", "shard": 0,
+                    "step": k}); ts += 1
+        evs.append({"ts": ts, "ev": "backend.decode", "shard": 0,
+                    "step": k, "dur_us": 1}); ts += 1
+        evs.append({"ts": ts, "ev": "backend.commit", "shard": 0,
+                    "step": k}); ts += 1
+        evs.append({"ts": ts, "ev": "engine.token", "rid": 0}); ts += 1
+    report = analyze_trace(_lines(evs), require_pipeline=True)
+    assert [v.code for v in report.violations] == ["no-lag"]
+
+
+def test_replay_two_shard_trace():
+    evs = _trace(steps=3, shard=0) + _trace(steps=3, shard=1, t0=1000)
+    report = analyze_trace(_lines(evs), require_pipeline=True)
+    assert report.ok
+    assert report.stats["shards"] == 2
+
+
+# ---------------------------------------------------------------------------
+# refcount sanitizer
+# ---------------------------------------------------------------------------
+
+def _pool(n=16, bs=4):
+    return BlockPool(PoolConfig(num_blocks=n, block_size=bs))
+
+
+def test_refsan_clean_on_legal_lifecycle():
+    pool = _pool()
+    san = refsan.attach(pool)
+    a = pool.alloc(3)
+    pool.incref(a[0])
+    pool.decref(a[0])
+    pool.decref(a[0], cache=True)        # -> cached
+    pool.reuse_cached(a[0])              # prefix hit revives it
+    for bid in a:
+        pool.decref(bid)
+    san.check(quiesced=True)             # no findings, no leaks
+    san.detach()
+    pool.check_invariants()
+
+
+def test_refsan_catches_double_free():
+    pool = _pool()
+    san = refsan.attach(pool)
+    (bid,) = pool.alloc(1)
+    pool.decref(bid)                     # freed
+    pool._free_block(bid)                # seeded double-free
+    kinds = [f.kind for f in san.findings]
+    assert "double-free" in kinds
+    san.detach()
+
+
+def test_refsan_catches_use_after_free_by_id_reuse():
+    pool = _pool(n=4)
+    san = refsan.attach(pool)
+    (stale,) = pool.alloc(1)
+    pool.decref(stale)                   # freed; holder keeps the id
+    (fresh,) = pool.alloc(1)             # id recycled to a new owner
+    assert fresh == stale
+    pool.decref(fresh)                   # new owner finishes with it
+    pool.touch(stale)                    # stale holder pokes the dead slot
+    f = next(f for f in san.findings if f.kind == "use-after-free")
+    assert "reuse" in f.msg              # provenance names the recycling
+    assert f.gen == 2                    # two generations lived in this slot
+    san.detach()
+
+
+def test_refsan_catches_write_to_freed_block():
+    import numpy as np
+    pool = BlockPool(PoolConfig(num_blocks=4, block_size=2,
+                                n_kv_heads=1, head_dim=2, n_layers=1))
+    san = refsan.attach(pool)
+    (bid,) = pool.alloc(1)
+    pool.decref(bid)
+    kv = np.zeros((1, 2, 1, 2))
+    pool.write_kv(bid, 0, kv, kv)        # seeded UAF write
+    assert any(f.kind == "use-after-free" and f.op == "write_kv"
+               for f in san.findings)
+    with pytest.raises(AssertionError, match="freed block"):
+        san.check()
+    san.detach()
+
+
+def test_refsan_reports_leaks_with_alloc_provenance():
+    pool = _pool()
+    san = refsan.attach(pool)
+    pool.alloc(2)                        # never freed
+    rep = san.report(quiesced=True)
+    assert not rep["ok"]
+    leaks = [f for f in rep["findings"] if f["kind"] == "leak"]
+    assert len(leaks) == 2
+    assert all("test_analysis.py" in f["history"] for f in leaks)
+    san.detach()
+
+
+def test_refsan_detach_restores_methods():
+    pool = _pool()
+    san = refsan.attach(pool)
+    assert pool.alloc.__name__ == "refsan_alloc"
+    san.detach()
+    assert pool.alloc.__name__ == "alloc"
+    pool.decref(pool.alloc(1)[0])        # plain pool still works
+
+
+def test_refsan_attaches_per_shard_on_sharded_pool():
+    sp = ShardedBlockPool(PoolConfig(num_blocks=16, block_size=4),
+                          n_shards=2)
+    san = refsan.attach(sp)
+    a = sp.shards[0].alloc(2)
+    sp.shards[1].alloc(1)
+    for bid in a:
+        sp.shards[0].decref(bid)
+    rep = san.report(quiesced=True)
+    leaks = [f for f in rep["findings"] if f["kind"] == "leak"]
+    assert len(leaks) == 1               # the shard-1 block
+    san.detach()

@@ -43,4 +43,4 @@ def test_fp8_cache_is_half_the_bytes():
     cfg8 = dataclasses.replace(cfg, kv_dtype="float8_e4m3fn")
     c16 = lm.init_cache(cfg, batch=2, max_seq=32)
     c8 = lm.init_cache(cfg8, batch=2, max_seq=32)
-    assert c8.k.nbytes * 2 == c16.k.nbytes
+    assert c8.cache.k.nbytes * 2 == c16.cache.k.nbytes

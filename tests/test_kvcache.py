@@ -259,8 +259,11 @@ def test_pool_page_tables_lane_padding():
 def test_soak_invariants():
     """No leak, no double-free, exact refcounts, CoW never mutates a shared
     block, under randomized start/extend/fork/finish traffic."""
+    from repro.analysis import refsan
+
     rng = np.random.default_rng(7)
     pool, cache = _pool(n=96, bs=4)
+    san = refsan.attach(pool)           # shadow refcounts with provenance
     vocab = 30                          # small vocab -> heavy prefix reuse
     live: list[tuple[BlockTable, list]] = []
     shared_snapshots: dict[int, tuple] = {}
@@ -320,6 +323,8 @@ def test_soak_invariants():
     pool.check_invariants()
     assert pool.num_live == 0
     assert pool.num_free + pool.num_cached == pool.cfg.num_blocks
+    san.check(quiesced=True)            # no leaks, no double-frees, no UAF
+    san.detach()
     # drain the cached set too: every block must come back
     pool.alloc(pool.cfg.num_blocks)
     assert pool.num_cached == 0 and len(cache) == 0

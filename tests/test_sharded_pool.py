@@ -262,11 +262,13 @@ def test_sharded_soak_admit_fork_free_invariants(tmp_path):
     step, and the flushed trace must reconstruct cleanly."""
     import json
 
+    from repro.analysis import refsan
     from repro.obs import Observer
 
     obs = Observer(paranoid=True)
     rng = np.random.default_rng(0)
     sp = _spool(num_blocks=64, n_shards=4, block_size=4)
+    san = refsan.attach(sp)             # per-shard shadow refcounts
     sp.obs = obs
     for i, p in enumerate(sp.shards):
         p.obs = obs
@@ -315,6 +317,8 @@ def test_sharded_soak_admit_fork_free_invariants(tmp_path):
             sp.shards[shard].decref(b)
     sp.check_invariants()
     assert sp.num_live == 0 and sp.reserved == 0
+    san.check(quiesced=True)            # no leaks, no double-frees, no UAF
+    san.detach()
     # the adopted per-shard counters are the live stats objects
     snap = obs.snapshot()
     for i, p in enumerate(sp.shards):

@@ -43,8 +43,9 @@ def _seq(pool, cache, tokens, kv=None):
 def test_demote_on_evict_captures_payload():
     pool, cache, tiers = _tiered_pool(num_blocks=4)
     t = _seq(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8])
-    pool.k_pages[:, t.blocks[0]] = 7.5          # recognizable payload
-    pool.dirty.add(t.blocks[0])                 # pending staging state
+    blk = np.full((pool.cfg.n_layers, pool.cfg.block_size,
+                   pool.cfg.n_kv_heads, pool.cfg.head_dim), 7.5)
+    pool.write_kv(t.blocks[0], 0, blk, blk)     # payload + pending staging
     k0 = np.array(pool.k_pages[:, t.blocks[0]])
     bid0 = t.blocks[0]
     cache.release(t, pool)
@@ -98,7 +99,10 @@ def test_tier_overflow_cascades_then_drops():
 # ---------------------------------------------------------------------------
 
 def test_promote_on_miss_is_bitwise_roundtrip():
+    from repro.analysis import refsan
+
     pool, cache, tiers = _tiered_pool(num_blocks=6)
+    san = refsan.attach(pool)           # demote/promote path under sanitizer
     tokens = [1, 2, 3, 4, 5, 6, 7, 8, 9]
     rng = np.random.default_rng(0)
     kv = (rng.standard_normal((1, 9, 1, 2), np.float32),
@@ -128,6 +132,8 @@ def test_promote_on_miss_is_bitwise_roundtrip():
     assert tiers.stats.promoted_tokens == 8
     tiers.check()
     pool.check_invariants()
+    san.check()                         # no double-frees / UAF on the path
+    san.detach()
 
 
 def test_promotion_dedup_within_one_batch():
@@ -560,6 +566,8 @@ if st is not None:
         cache.attach(pool)
         tiers = TierManager(pool, cache,
                             (TierSpec("host", 4), TierSpec("remote", 8)))
+        from repro.analysis import refsan
+        san = refsan.attach(pool)
         prompts = [[int(t) for t in rng.integers(1, 50, 2 * bs + 1)]
                    for _ in range(3)]
         prompts.append(list(prompts[0][:bs]) + [77])   # shared prefix
@@ -601,6 +609,8 @@ if st is not None:
                 pool.decref(b)
             pool.check_invariants()
             tiers.check()
+        san.check()
+        san.detach()
 else:
     def test_tier_roundtrip_property():
         pytest.importorskip("hypothesis")

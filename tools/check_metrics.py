@@ -28,20 +28,28 @@ Checks, all offline:
   * split-phase decode-pipeline telemetry (``--require-pipeline``, the
     CI pipelined-serve smoke's mode): the
     ``engine.{dispatch,sync,commit}_ms`` phase histograms counted work
-    and the ``backend.inflight_steps`` gauge exists; and per shard, by
-    trace order, every decode step's ``backend.dispatch`` precedes its
-    ``backend.decode`` sync span, its ``backend.commit`` lands after the
-    sync and before the next step's dispatch, and at least one commit
-    has an ``engine.token`` strictly between its sync and itself — the
-    engine sampled a token whose KV write-back was still deferred, i.e.
-    the commit lag is exactly one step.
+    and the ``backend.inflight_steps`` gauge exists; the trace ordering
+    itself (dispatch -> sync -> commit per shard, one-step write-back
+    lag, ≥1 token between a sync and its commit) is replayed through the
+    ``repro.analysis.races`` happens-before checker — the same model the
+    in-process interleaving tests explore.
 
 Exits non-zero listing every violation.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
+
+# CI invokes this script bare (no PYTHONPATH=src); the pipeline checks
+# live in repro.analysis.races, so bootstrap the import path ourselves
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis import races  # noqa: E402
 
 # per-rid lifecycle, in required timeline order
 LIFECYCLE = ("sched.offer", "engine.admit", "engine.prefill",
@@ -248,72 +256,16 @@ def check_pipeline_snapshot(snap: dict) -> list:
 
 
 def check_pipeline_trace(lines: list) -> list:
-    """Dispatch-before-sync ordering and the one-step commit lag, by
-    trace order (entry-timestamp sorted, the file's order) per shard.
-
-    For every decode step k on a shard: ``backend.dispatch`` (k) must
-    precede the ``backend.decode`` sync span (k); ``backend.commit`` (k)
-    must land after the sync and before dispatch (k+1).  At least one
-    commit must have an ``engine.token`` strictly between its sync and
-    itself: the engine consumed a token whose KV write-back was still
-    deferred — the pipelined lag is exactly one step.
+    """Split-phase decode lifecycle ordering, delegated to the
+    happens-before checker in ``repro.analysis.races``: per shard, every
+    step's dispatch precedes its sync, its commit lands after the sync
+    and before the next dispatch (one-step write-back lag), prefill only
+    enters a drained pipeline, and at least one ``engine.token`` lands
+    strictly between a sync and its commit — the engine sampled a token
+    whose KV write-back was still deferred.
     """
-    bad = []
-    events = []
-    for line in lines:
-        line = line.strip()
-        if not line:
-            continue
-        try:
-            events.append(json.loads(line))
-        except json.JSONDecodeError:
-            continue                 # check_trace already reported it
-    token_idx = [i for i, ev in enumerate(events)
-                 if ev.get("ev") == "engine.token"]
-    # (shard, step) -> global trace index per pipeline event kind
-    idx: dict = {"backend.dispatch": {}, "backend.decode": {},
-                 "backend.commit": {}}
-    shards = set()
-    for i, ev in enumerate(events):
-        kind = ev.get("ev")
-        if kind in idx and "step" in ev:
-            idx[kind].setdefault((ev.get("shard"), ev["step"]), i)
-            shards.add(ev.get("shard"))
-    if not idx["backend.dispatch"]:
-        bad.append("trace: --require-pipeline but no backend.dispatch "
-                   "events (pipelined decode never ran)")
-        return bad
-    lagged = 0
-    for (shard, step), di in sorted(idx["backend.dispatch"].items(),
-                                    key=lambda kv: kv[1]):
-        si = idx["backend.decode"].get((shard, step))
-        ci = idx["backend.commit"].get((shard, step))
-        ni = idx["backend.dispatch"].get((shard, step + 1))
-        if si is None:
-            bad.append(f"trace: step {step} shard {shard} dispatched "
-                       "but never synced")
-            continue
-        if si < di:
-            bad.append(f"trace: step {step} shard {shard} sync span "
-                       "precedes its dispatch")
-        if ci is None:
-            bad.append(f"trace: step {step} shard {shard} synced but "
-                       "never committed (flush lost the write-back)")
-            continue
-        if ci < si:
-            bad.append(f"trace: step {step} shard {shard} commit "
-                       "precedes its sync")
-        if ni is not None and ci > ni:
-            bad.append(f"trace: step {step} shard {shard} commit after "
-                       f"step {step + 1}'s dispatch (lag exceeded one "
-                       "step)")
-        if any(si < t < ci for t in token_idx):
-            lagged += 1
-    if lagged == 0:
-        bad.append("trace: no commit has an engine.token between its "
-                   "sync and itself — write-back was never deferred "
-                   "across a token (pipeline off?)")
-    return bad
+    report = races.analyze_trace(lines, require_pipeline=True)
+    return [f"trace: {v.msg}" for v in report.violations]
 
 
 def main(argv: list) -> int:

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Repo-specific protocol lint (see docs/ANALYSIS.md for the rules).
+
+Usage:
+    python tools/lint.py src tests [--json out.json] [--list-rules]
+
+Prints ``path:line:col: [rule] message`` per finding and exits 1 when
+anything is found (0 on a clean tree).  ``--json`` writes a machine-
+readable summary alongside, matching the bench ``--json`` conventions.
+
+Fixture directories named ``lint_fixtures`` are skipped — they hold the
+known-bad corpus the linter's own tests run against.
+"""
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src tests)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a machine-readable findings summary")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, desc in sorted(lint.RULES.items()):
+            print(f"{name:22s} {desc}")
+        return 0
+
+    paths = args.paths or ["src", "tests"]
+    nfiles = 0
+    findings = []
+    for full, rel in lint.iter_py_files(paths, _ROOT):
+        nfiles += 1
+        findings.extend(lint.lint_file(full, rel))
+
+    for f in findings:
+        print(f)
+
+    counts = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    summary = {
+        "ok": not findings,
+        "files": nfiles,
+        "findings": [f.to_dict() for f in findings],
+        "counts": counts,
+    }
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(summary, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    if findings:
+        print(f"[lint] BAD {len(findings)} finding(s) across {nfiles} files")
+        return 1
+    print(f"[lint] OK {nfiles} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
