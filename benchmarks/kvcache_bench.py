@@ -64,6 +64,15 @@ XLA gather decode (CPU Pallas only runs interpreted, which is not a
 wall-clock measurement).  Greedy tokens must be bit-identical; the
 derived column is 100 * t_sequential / t_pipelined (>= 100: the
 pipeline at least matches sequential step throughput).
+
+Traffic-class section (``kvcache/sched/class/...``): SMS staged
+scheduling + decode preemption under overload
+(``mixed_traffic_comparison``) — an identical mixed chat/batch/long-
+context stream (Zipf prefix popularity, fake step clock, deliberately
+undersized pool) served by the class-aware scheduler and the class-blind
+one, single-pool and 2-shard.  Gated rows are pinned ratios:
+interactive-class p99 turnaround must improve (>= ~100) while batch-
+class token throughput stays within 10% of class-blind.
 """
 from __future__ import annotations
 
@@ -672,6 +681,118 @@ def decode_pipeline_comparison(scenario: str = "single", *,
             "ratio": 100.0 * t_seq / max(t_pipe, 1e-12)}
 
 
+def mixed_traffic_comparison(scenario: str = "single", *,
+                             max_lanes: int = 4, seed: int = 0) -> dict:
+    """Class-aware SMS scheduling + decode preemption vs the class-blind
+    scheduler, same overloaded mixed-class stream, fake step clock.
+
+    The stream mixes three traffic classes the way a serving mix does:
+    ``batch`` summarize jobs (long decodes) and long-context ``stream``
+    requests arrive first and hog the deliberately undersized pool;
+    ``interactive`` chat turns (short decodes, Zipf-popular prefixes)
+    keep arriving while the pool is full.  Both engines serve identical
+    requests through a real smoke-LM ``PagedBackend`` (single pool or 2
+    mesh shards); bounced offers retry every step (client retry), so
+    every request eventually completes and the only difference is WHEN.
+
+    Returns per-class p99 turnaround (finish - arrival, in steps) for
+    both schedulers plus the two gated ratios:
+
+      ``interactive_gain``   100 * blind_p99 / aware_p99 for the
+                             interactive class (> 100: class-aware
+                             scheduling + preemption cut chat tail
+                             latency under overload)
+      ``batch_tput_ratio``   100 * aware / blind batch-class token
+                             throughput (tokens per step) — the price
+                             paid; the gate holds it within 10%
+
+    Tokens are greedy over fixed params, the clock is the step counter,
+    and the schedule is seeded, so both ratios are deterministic."""
+    import jax  # noqa: F401  (backend selection side effects)
+    from repro.kvcache.backend import make_backend
+    from repro.serve.engine import PagedLM, ServeEngine
+    from repro.serving.scheduler import MarsScheduler, Request, \
+        default_classes
+
+    mode = "kernel" if __import__("jax").default_backend() \
+        in ("tpu", "gpu") else "gather"
+    cfg, params = _pipeline_model(seed)
+    rng = np.random.default_rng(seed)
+    prefixes = [tuple(int(t) for t in rng.integers(1, cfg.vocab, 16))
+                for _ in range(4)]
+    long_prefixes = [tuple(int(t) for t in rng.integers(1, cfg.vocab, 48))
+                     for _ in range(2)]
+    probs = 1.0 / np.arange(1, 5) ** 1.1
+    probs /= probs.sum()
+    # request spec: (class, prompt, arrival, max_new) — instantiated
+    # fresh per engine (the scheduler stamps routing state on Request)
+    spec = []
+    for i in range(4):          # batch summarize: long decode, early
+        spec.append(("batch", prefixes[i % 2], float(i), 16))
+    for i in range(3):          # long-context stream: big prompt
+        spec.append(("stream", long_prefixes[i % 2], 2.0 + 2 * i, 8))
+    for i in range(12):         # interactive chat: Zipf prefix, steady
+        p = prefixes[int(rng.choice(4, p=probs))]
+        spec.append(("interactive", p, 4.0 + 2 * i, 4))
+
+    def serve(classes) -> dict:
+        kw = dict(num_blocks=16, block_size=16, decode_mode=mode,
+                  kernel_interpret=False)
+        if scenario == "shards2":
+            # 12 blocks/shard: a sequence never spans shards, so per-shard
+            # pressure must stay comparable to the single-pool run for
+            # overload (and preemption) to actually trigger
+            kw.update(shards=2, num_blocks=24)
+        else:
+            assert scenario == "single", scenario
+        backend = make_backend(cfg, "paged", **kw)
+        pool = backend.pool
+        sched = MarsScheduler(pool=pool, classes=classes)
+        eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
+                          max_lanes=max_lanes)
+        reqs = [Request(rid=i, prompt=pr + (1 + i, 2 + i), arrival=arr,
+                        max_new=new, traffic_class=cname)
+                for i, (cname, pr, arr, new) in enumerate(spec)]
+        queue = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        waiting: list = []
+        finished_at: dict = {}
+        t0 = time.perf_counter()
+        step = 0
+        while len(finished_at) < len(reqs):
+            now = float(step)
+            while queue and queue[0].arrival <= now:
+                waiting.append(queue.pop(0))
+            waiting = [r for r in waiting if not eng.submit(r)]
+            eng.step(now=now)
+            for rid in eng.finished:
+                finished_at.setdefault(rid, now)
+            step += 1
+            assert step < 5000, "mixed-traffic serve did not drain"
+        wall_us = (time.perf_counter() - t0) * 1e6
+        backend.release()
+        lat: dict = {}
+        toks: dict = {}
+        for r in reqs:
+            lat.setdefault(r.traffic_class, []).append(
+                finished_at[r.rid] - r.arrival)
+            toks[r.traffic_class] = toks.get(r.traffic_class, 0) + r.max_new
+        return {"p99": {c: float(np.percentile(v, 99))
+                        for c, v in lat.items()},
+                "batch_tput": toks["batch"] / step,
+                "preempts": sum(cs.preempt
+                                for cs in sched.class_stats.values()),
+                "steps": step, "wall_us": wall_us}
+
+    aware = serve(default_classes(3))
+    blind = serve(None)
+    return {"aware": aware, "blind": blind,
+            "interactive_gain": 100.0 * blind["p99"]["interactive"]
+            / max(aware["p99"]["interactive"], 1e-9),
+            "batch_tput_ratio": 100.0 * aware["batch_tput"]
+            / max(blind["batch_tput"], 1e-9),
+            "wall_us": aware["wall_us"] + blind["wall_us"]}
+
+
 def run(emit, smoke: bool = False) -> None:
     lanes = (8,) if smoke else (8, 32)
     seeds = (0,) if smoke else (0, 1, 2)
@@ -806,3 +927,21 @@ def run(emit, smoke: bool = False) -> None:
         r = decode_pipeline_comparison(scen)
         emit(f"kvcache/decode/pipeline/{scen}", r["pipe_us"],
              f"{r['ratio']:.2f}%")
+    # SMS traffic classes under overload: class-aware staged scheduling +
+    # decode preemption vs the class-blind scheduler, identical mixed
+    # stream on a fake step clock.  Both gated rows are pinned ratios:
+    # interactive-p99 >= ~100 (chat tail latency must improve) and
+    # batch-tput within 10% of class-blind (the throughput price cap)
+    for scen in ("single", "shards2"):
+        r = mixed_traffic_comparison(scen)
+        emit(f"kvcache/sched/class/{scen}/interactive-p99",
+             r["wall_us"] / 2, f"{r['interactive_gain']:.2f}%")
+        emit(f"kvcache/sched/class/{scen}/batch-tput",
+             r["wall_us"] / 2, f"{r['batch_tput_ratio']:.2f}%")
+        # absolute tails + preempt count: detail rows, outside the gate
+        emit(f"kvcache/scheddetail/{scen}/aware-p99", r["wall_us"] / 2,
+             f"{r['aware']['p99']['interactive']:.1f}steps")
+        emit(f"kvcache/scheddetail/{scen}/blind-p99", r["wall_us"] / 2,
+             f"{r['blind']['p99']['interactive']:.1f}steps")
+        emit(f"kvcache/scheddetail/{scen}/preempts", r["wall_us"] / 2,
+             f"{r['aware']['preempts']}preempts")

@@ -28,7 +28,7 @@ import sys
 # keys gated against the baseline: deterministic DRAM-simulation /
 # allocator-churn outputs (tier & alloc rows are seeded and bit-stable;
 # their wall-clock lives in the ungated us column)
-_GATED = re.compile(r"^kvcache/(placement|decode|alloc|tier)/")
+_GATED = re.compile(r"^kvcache/(placement|decode|alloc|tier|sched)/")
 _BASELINE_DEFAULT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "bench_baseline.json")
@@ -44,6 +44,14 @@ _TOLERANCES = {
     "kvcache/decode/pipeline/single": 0.30,
     "kvcache/decode/pipeline/shards2": 0.30,
     "kvcache/decode/pipeline/tiered": 0.30,
+    # class-aware vs class-blind interactive p99 ratio: 100 = tie; the
+    # staged scheduler must improve chat tail latency under overload
+    # (small slack for cross-version token drift in the smoke LM)
+    "kvcache/sched/class/single/interactive-p99": 0.05,
+    "kvcache/sched/class/shards2/interactive-p99": 0.05,
+    # batch-class token throughput vs class-blind: the acceptance cap is
+    # "within 10%", which is exactly the default tolerance against the
+    # pinned 100 reference
 }
 # keys whose baseline is a definitional reference point, not a measured
 # snapshot — pinned so --update-baseline cannot drift the gate (wall-clock
@@ -54,6 +62,10 @@ _PINNED = {
     "kvcache/decode/pipeline/single": 100.0,
     "kvcache/decode/pipeline/shards2": 100.0,
     "kvcache/decode/pipeline/tiered": 100.0,
+    "kvcache/sched/class/single/interactive-p99": 100.0,
+    "kvcache/sched/class/shards2/interactive-p99": 100.0,
+    "kvcache/sched/class/single/batch-tput": 100.0,
+    "kvcache/sched/class/shards2/batch-tput": 100.0,
 }
 
 

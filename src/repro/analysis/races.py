@@ -10,9 +10,13 @@ small protocol per shard:
 * ``sync(k)`` must follow ``dispatch(k)`` and moves the step from
   in-flight to pending;
 * ``commit(k)`` must follow ``sync(k)``;
-* barrier ops (``prefill``/``fork``/``free``/``release``) require the
-  shard fully drained (no in-flight, no pending step) — the flush
-  barrier in front of every CoW fork / free / admission;
+* barrier ops (``prefill``/``fork``/``free``/``release``/``resume``)
+  require the shard fully drained (no in-flight, no pending step) — the
+  flush barrier in front of every CoW fork / free / admission / resume;
+* ``pause`` (decode preemption) must likewise observe the flush barrier
+  BEFORE demoting the victim's blocks: a pause with a step in flight or
+  a write-back still pending is the distinct ``preempt-during-dispatch``
+  violation (the demoted pages would race the deferred KV commit);
 * pipelining is real only if ≥1 token is emitted strictly between some
   ``sync(k)`` and its ``commit(k)`` (``lag_tokens``).
 
@@ -40,9 +44,10 @@ import json
 
 DISPATCH, SYNC, COMMIT = "dispatch", "sync", "commit"
 PREFILL, FORK, FREE, RELEASE = "prefill", "fork", "free", "release"
+PAUSE, RESUME = "pause", "resume"
 TOKEN = "token"
-_BARRIERS = {PREFILL, FORK, FREE, RELEASE}
-KINDS = {DISPATCH, SYNC, COMMIT, TOKEN} | _BARRIERS
+_BARRIERS = {PREFILL, FORK, FREE, RELEASE, RESUME}
+KINDS = {DISPATCH, SYNC, COMMIT, TOKEN, PAUSE} | _BARRIERS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +167,17 @@ class PipelineChecker:
                               f"but step {s.pending} is pending")
                 s.pending = None
                 s.committed += 1
+        elif ev.kind == PAUSE:
+            # preemption's own code: demoting the victim's blocks while a
+            # decode is in flight (or its KV write-back still deferred)
+            # would hand reusable pages to the allocator with device
+            # writes against them still outstanding
+            if s.inflight is not None or s.pending is not None:
+                stuck = s.inflight if s.inflight is not None else s.pending
+                self._bad("preempt-during-dispatch", ev.shard, ev.step,
+                          f"pause on shard {ev.shard} with step {stuck} "
+                          "not yet committed — block demotion must observe "
+                          "the flush barrier before preempting")
         elif ev.kind in _BARRIERS:
             if s.inflight is not None or s.pending is not None:
                 stuck = s.inflight if s.inflight is not None else s.pending
@@ -268,6 +284,8 @@ _EV_MAP = {
     "backend.decode": SYNC,       # span emitted when sync() returns
     "backend.commit": COMMIT,
     "backend.prefill": PREFILL,
+    "backend.pause": PAUSE,       # decode preemption: pause -> demote
+    "backend.resume": RESUME,     # bitwise restore (a flush barrier)
     "engine.token": TOKEN,
 }
 

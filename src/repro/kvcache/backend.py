@@ -753,6 +753,113 @@ class PagedBackend:
             conv=None if src.conv is None else src.conv.copy())
         return nsid
 
+    # -- decode preemption (pause -> demote -> resume) -----------------------
+
+    def pause_seq(self, sid: int) -> dict:
+        """Preempt a live decode: flush the pipeline FIRST (the paused
+        lane may still be owed a deferred write-back token — pausing
+        mid-step would capture half a state), capture the sequence's
+        full decode state host-side (cached tokens, every block's KV
+        payload + content tag, hybrid ssm/conv), then release its
+        blocks.  Registered prefix blocks stay resident as evictable
+        cache — demotable to the spill tiers under pressure via the
+        existing ``TierManager`` eviction hook — so a prompt resume
+        usually re-matches them for free; private blocks free outright.
+
+        Returns the opaque pause record ``resume_seq`` restores from.
+        The captured payloads are verbatim pool bytes, which is what
+        makes resumption bitwise: nothing is ever recomputed."""
+        self._check_released()
+        self.flush()
+        if self.obs is not None:
+            self.obs.trace.event("backend.pause", shard=self.obs_shard,
+                                 sid=sid)
+        seq = self._seqs.pop(sid)
+        pool = self.pool
+        blocks = []
+        for bid in seq.table.blocks:
+            blocks.append({
+                "content": pool.content[bid],
+                "k": np.array(pool.k_pages[:, bid]),
+                "v": np.array(pool.v_pages[:, bid]),
+            })
+        rec = {
+            "tokens": list(seq.tokens),
+            "num_tokens": seq.table.num_tokens,
+            "blocks": blocks,
+            "ssm": None if seq.ssm is None else seq.ssm.copy(),
+            "conv": None if seq.conv is None else seq.conv.copy(),
+        }
+        self.prefix.release(seq.table, pool)
+        return rec
+
+    def resume_seq(self, rec: dict,
+                   on_alloc: Optional[Callable[[int, int], None]] = None
+                   ) -> int:
+        """Re-admit a paused sequence bitwise-identically under a new
+        sid.  No prefill recompute anywhere: the leading blocks re-enter
+        through the prefix cache and tiers (``match`` returns the SAME
+        bytes — registration is exact-prefix keyed and tier demotion
+        captured payloads verbatim), and whatever the caches no longer
+        hold is restored from the pause record's captured pages with
+        plain ``alloc`` + ``write_kv``.  Atomic under pool exhaustion:
+        on RuntimeError every matched reference is released and nothing
+        stays live."""
+        self._check_released()
+        self.flush()
+        if self.obs is not None:
+            self.obs.trace.event("backend.resume", shard=self.obs_shard,
+                                 tokens=len(rec["tokens"]))
+        pool = self.pool
+        bs = pool.cfg.block_size
+        tokens = list(rec["tokens"])
+        num = rec["num_tokens"]
+        if not self.share_prefixes:
+            bids, n = [], 0
+        elif self.tiers is not None:
+            bids, n = self.tiers.match(tokens)
+        else:
+            bids, n = self.prefix.match(tokens, pool)
+        # as in ``_add_seqs_impl``: the on_alloc claim counts only the
+        # restore's own allocations (tier promotion destinations are the
+        # tier manager's business, not the caller's reservation)
+        allocs0 = pool.stats.allocs
+        start = n // bs
+        need = len(rec["blocks"]) - start
+        try:
+            if not pool.can_alloc(need):
+                raise RuntimeError(
+                    f"pool exhausted: resume needs {need} blocks, "
+                    f"free {pool.num_free}, cached {pool.num_cached}")
+            fresh = pool.alloc(need, hint_blocks=bids) if need else []
+        except RuntimeError:
+            if self.tiers is not None:
+                self.tiers.cancel_promotions()
+            self.prefix.release(BlockTable(list(bids), n), pool)
+            raise
+        for j, bid in enumerate(fresh):
+            src = rec["blocks"][start + j]
+            pool.content[bid] = src["content"]
+            pool.write_kv(bid, 0, src["k"], src["v"])
+            pool.touch(bid)
+            end = (start + j + 1) * bs
+            if self.share_prefixes and end <= num:
+                self.prefix.register(tuple(tokens[:end]), bid, pool)
+        if self.tiers is not None:
+            self.tiers.flush_promotions()
+        sid = self._next_sid
+        self._next_sid += 1
+        seq = _PagedSeq(sid, BlockTable(list(bids) + list(fresh), num),
+                        tokens,
+                        ssm=None if rec["ssm"] is None
+                        else rec["ssm"].copy(),
+                        conv=None if rec["conv"] is None
+                        else rec["conv"].copy())
+        self._seqs[sid] = seq
+        if on_alloc is not None:
+            on_alloc(sid, pool.stats.allocs - allocs0)
+        return sid
+
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],
                on_alloc: Optional[Callable[[int, int], None]] = None):
         """One ragged decode step over live sequences — the synchronous
@@ -1235,6 +1342,45 @@ class ShardedPagedBackend:
         self._next_sid += 1
         self._seqs[gsid] = (shard, nisid)
         self._rev[(shard, nisid)] = gsid
+        return gsid
+
+    # -- decode preemption (pause -> demote -> resume) -----------------------
+
+    def pause_seq(self, sid: int) -> dict:
+        """Preempt a live decode on its shard: barrier across every
+        shard first (the outer round is all-or-nothing), then capture
+        and release on the owning shard (``PagedBackend.pause_seq``).
+        The record remembers the shard so an un-routed resume defaults
+        back to where the cached/demoted blocks still live."""
+        self._check_released()
+        self.flush()
+        shard, isid = self._seqs.pop(sid)
+        del self._rev[(shard, isid)]
+        rec = self.backends[shard].pause_seq(isid)
+        rec["shard"] = shard
+        return rec
+
+    def resume_seq(self, rec: dict,
+                   on_alloc: Optional[Callable[[int, int], None]] = None,
+                   shard: Optional[int] = None) -> int:
+        """Re-admit a paused sequence under a new global sid.
+
+        ``shard=None`` resumes on the pause shard (prefix/tier matches
+        only ever hit there); an explicit shard restores the captured
+        payload onto that shard instead — the bytes are shard-agnostic,
+        only the cache reuse is not.  Bitwise either way."""
+        self._check_released()
+        self.flush()
+        if shard is None:
+            shard = rec.get("shard", self.pool.least_loaded())
+        assert 0 <= shard < self.pool.n_shards, shard
+        gsid = self._next_sid
+        self._next_sid += 1
+        cb = None if on_alloc is None else \
+            (lambda _isid, n: on_alloc(gsid, n))
+        isid = self.backends[shard].resume_seq(rec, on_alloc=cb)
+        self._seqs[gsid] = (shard, isid)
+        self._rev[(shard, isid)] = gsid
         return gsid
 
     def decode(self, params, sids: Sequence[int], tokens: Sequence[int],

@@ -21,7 +21,12 @@ from repro import configs
 from repro.models import lm
 from repro.serve.step import greedy_generate
 from repro.serving.scheduler import MarsScheduler, Request, \
-    unique_prefix_blocks
+    default_classes, unique_prefix_blocks
+
+# --classes N: per-class decode-length profile for the synthetic stream —
+# interactive stays short (chat turns), batch decodes long (summarize),
+# stream sits between; the multipliers scale --new-tokens
+_CLASS_NEW_TOKENS = {"interactive": 1, "batch": 4, "stream": 2}
 
 
 def synth_requests(n: int, vocab: int, n_prefixes: int = 8,
@@ -168,7 +173,8 @@ def main_paged(args):
             cfg, "paged", num_blocks=args.pool_blocks, block_size=16,
             decode_mode=decode_mode, tiered=args.tiered_kv)
     pool = backend.pool
-    sched = MarsScheduler(pool=pool)
+    classes = default_classes(args.classes) if args.classes > 1 else None
+    sched = MarsScheduler(pool=pool, classes=classes)
     if args.tiered_kv and args.shards > 1:
         # admission counts a promotable lower-tier prefix hit toward
         # shard routing: land the request where its demoted blocks are
@@ -176,10 +182,16 @@ def main_paged(args):
     eng = ServeEngine(pool, sched, PagedLM(params, cfg, backend),
                       max_lanes=args.batch, pipeline=args.pipeline)
     obs = _attach_metrics(args, eng)
-    reqs = [Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
-                    prefix_len=r.prefix_len, max_new=args.new_tokens)
-            for r in synth_requests(args.requests, vocab=cfg.vocab,
-                                    n_prefixes=args.prefixes)]
+    cnames = [c.name for c in classes] if classes else None
+    reqs = []
+    for r in synth_requests(args.requests, vocab=cfg.vocab,
+                            n_prefixes=args.prefixes):
+        cname = cnames[r.rid % len(cnames)] if cnames else "default"
+        mult = _CLASS_NEW_TOKENS.get(cname, 1) if cnames else 1
+        reqs.append(Request(rid=r.rid, prompt=r.prompt, arrival=r.arrival,
+                            prefix_len=r.prefix_len,
+                            max_new=args.new_tokens * mult,
+                            traffic_class=cname))
     t0 = time.time()
     finished = eng.run(reqs)
     dt = time.time() - t0
@@ -196,6 +208,14 @@ def main_paged(args):
           f"prefix_hits={pool.stats.prefix_hits} "
           f"evictions={pool.stats.evictions} "
           f"pool_rejects={sched.stats.pool_rejects} wall={dt:.1f}s")
+    if classes:
+        for cname, cs in sched.class_stats.items():
+            h = sched.wait_hist[cname]
+            print(f"[serve --paged {cfg.name}] class {cname}: "
+                  f"admit={cs.admit} reject={cs.reject} defer={cs.defer} "
+                  f"preempt={cs.preempt} scheduled={cs.scheduled} "
+                  f"wait p50={h.quantile(0.5):.1f}ms "
+                  f"p99={h.quantile(0.99):.1f}ms")
     if args.tiered_kv:
         inner = getattr(backend, "backends", None) or [backend]
         tm = [b.tiers for b in inner if b.tiers is not None]
@@ -275,6 +295,13 @@ def main(argv=None):
                          "affinity admission routing, per-shard kernel "
                          "decode); CPU runs force a host-device mesh")
     ap.add_argument("--pool-blocks", type=int, default=256)
+    ap.add_argument("--classes", type=int, default=0,
+                    help="with --paged (full-LM): SMS traffic classes — "
+                         "install the first N default_classes() streams "
+                         "(interactive/batch/stream), stamp the synthetic "
+                         "requests round-robin with per-class decode "
+                         "lengths, and let overload preempt batch decodes "
+                         "for interactive arrivals (0/1 = class-blind)")
     ap.add_argument("--tiered-kv", action="store_true",
                     help="with --paged: spill tiers behind the block "
                          "pool(s) — eviction demotes registered prefix "

@@ -169,6 +169,17 @@ class MetricsRegistry:
     def observe(self, name: str, v: float) -> None:
         self.histogram(name).observe(v)
 
+    def attach_metric(self, name: str, metric) -> None:
+        """Publish an externally owned metric object (e.g. a component's
+        live ``Histogram``) under ``name`` — aliasing like ``adopt``, so
+        snapshots read the component's own values.  Idempotent for the
+        same object; a different object under a taken name raises."""
+        have = self._metrics.get(name)
+        if have is None:
+            self._metrics[name] = metric
+        elif have is not metric:
+            raise ValueError(f"metric {name!r} already registered")
+
     def adopt(self, prefix: str, group: "StatGroup") -> None:
         """Publish a stats facade's counters under ``prefix.<field>``.
 

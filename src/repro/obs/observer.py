@@ -103,6 +103,15 @@ class Observer:
         self.registry.adopt("engine", engine.stats)
         engine.scheduler.obs = self
         self.registry.adopt("sched", engine.scheduler.stats)
+        # per-traffic-class streams (SMS staged scheduling): counters
+        # adopt as ``class.<name>.<field>``, and the scheduler's live
+        # wait-time histograms alias in as ``class.<name>.wait_ms`` (the
+        # p50/p99 gauges are published by ``schedule_batch`` itself)
+        for cname, cs in getattr(engine.scheduler, "class_stats",
+                                 {}).items():
+            self.registry.adopt(f"class.{cname}", cs)
+        for cname, h in getattr(engine.scheduler, "wait_hist", {}).items():
+            self.registry.attach_metric(f"class.{cname}.wait_ms", h)
         pool = engine.pool
         if getattr(pool, "is_sharded", False):
             pool.obs = self

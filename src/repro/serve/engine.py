@@ -109,6 +109,8 @@ class SeqState:
     out_tokens: list = dataclasses.field(default_factory=list)
     sid: int = -1                # PagedBackend sequence id (PagedLM driver)
     pending: Optional[int] = None  # first token, produced by prefill logits
+    traffic_class: str = "default"  # scheduler stream (preemption policy)
+    page: str = ""               # prefix-page key (re-routing on resume)
 
     @property
     def done(self) -> bool:
@@ -168,6 +170,11 @@ class ServeEngine:
         self.pipeline = pipeline
         self.max_lanes = max_lanes
         self.running: list[SeqState] = []
+        # preempted decodes: (SeqState, pause record) pairs, oldest first.
+        # Their KV pages left the pool (demoted to evictable cache / spill
+        # tiers by ``pause_seq``); ``_try_resume`` restores them bitwise
+        # when lanes and pool headroom return.
+        self.paused: list = []
         self.finished: dict[int, list] = {}
         self.stats = EngineStats()
         self.obs = None          # telemetry hook (obs.Observer.attach)
@@ -242,6 +249,10 @@ class ServeEngine:
             seqs = self._prefill_lm(req, prompt)
         else:
             seqs = self._prefill_toy(req, prompt)
+        cname = getattr(req, "_cls", getattr(req, "traffic_class", "default"))
+        for s in seqs:
+            s.traffic_class = cname
+            s.page = req.page
         self.stats.prefills += 1
         self.stats.prefill_tokens += len(prompt)
         return seqs
@@ -289,10 +300,15 @@ class ServeEngine:
         running lane.  Returns number of tokens generated this step.
         A no-op (returns 0 untouched) when nothing runs and nothing is
         queued."""
-        if not self.running and not len(self.scheduler):
+        if not self.running and not self.paused \
+                and not len(self.scheduler):
             return 0
         obs = self.obs
         t0 = time.perf_counter() if obs is not None else 0.0
+        # overload first: a latency-class arrival bounced since the last
+        # step -> pause a throughput decode so this round's admission and
+        # shard routing see the freed headroom
+        preempted = self._maybe_preempt()
         free = self.max_lanes - len(self.running)
         if free > 0:
             # a request occupies one decode lane per forked sample
@@ -302,6 +318,8 @@ class ServeEngine:
                     obs.trace.event("engine.admit", rid=req.rid,
                                     n_samples=req.n_samples)
                 self.running.extend(self._prefill(req))
+        if not preempted:
+            self._try_resume()
         if not self.running:
             return 0
         # page-coherent lane order: tail blocks grouped by row neighborhood
@@ -341,6 +359,92 @@ class ServeEngine:
             obs.step_done(self, (time.perf_counter() - t0) * 1e3,
                           lanes=len(nxt), tokens=len(nxt))
         return len(nxt)
+
+    # -- decode preemption (overload) ----------------------------------------
+
+    def _maybe_preempt(self) -> bool:
+        """Consume the scheduler's overload hint (a latency-class request
+        bounced on pool capacity or deferred on shard headroom) by pausing
+        the running throughput-class decode with the most work left.
+
+        ``pause_seq`` drains the decode pipeline (flush barrier), captures
+        the victim's KV pages host-side verbatim, and releases its blocks
+        to evictable cache — demotable to spill tiers from there — so the
+        next admission round actually sees the headroom; the victim's
+        remaining admission reservation releases with it.  LM-driver,
+        single-lane requests only: forked lanes share blocks CoW and
+        would free almost nothing."""
+        lm = self._lm
+        if lm is None or not self.scheduler.take_preempt_hint():
+            return False
+        classes = getattr(self.scheduler, "classes", {})
+
+        def latency(name: str) -> bool:
+            c = classes.get(name)
+            return c is not None and c.latency
+
+        cand = [s for s in self.running
+                if s.sid >= 0 and not latency(s.traffic_class)
+                and self._live_seqs.get(s.rid, 0) == 1]
+        if not cand:
+            return False
+        victim = max(cand, key=lambda s: s.max_new - s.n_generated)
+        rec = lm.backend.pause_seq(victim.sid)
+        if self.obs is not None:
+            self.obs.trace.event("engine.pause", rid=victim.rid,
+                                 sid=victim.sid,
+                                 traffic_class=victim.traffic_class,
+                                 tokens=victim.n_generated)
+        self.running.remove(victim)
+        del self._sid_rid[victim.sid]
+        victim.sid = -1
+        del self._live_seqs[victim.rid]
+        self._unreserve(victim.rid, self._claims.pop(victim.rid, 0))
+        self.paused.append((victim, rec))
+        self.scheduler.note_preempt(victim.traffic_class)
+        return True
+
+    def _try_resume(self) -> None:
+        """Opportunistic un-pause, oldest first: when a decode lane and
+        pool headroom are both available again, re-reserve the paused
+        sequence's remaining worst-case blocks (re-routed through the
+        sharded pool's page-affinity logic when applicable) and restore
+        it bitwise via ``resume_seq``.  Stops at the first sequence that
+        doesn't fit — paused order is FIFO, like the scheduler's bounded
+        delay."""
+        lm = self._lm
+        while self.paused and len(self.running) < self.max_lanes:
+            seq, rec = self.paused[0]
+            bs = self.pool.cfg.block_size
+            # worst case for the rest of this sequence's life: KV for
+            # every token so far plus everything still to generate
+            need = -(-(len(seq.tokens) + seq.max_new - seq.n_generated)
+                     // bs)
+            if not self.pool.can_reserve(need):
+                return
+            self.pool.reserve(need)
+            kw = {}
+            if self._sharded:
+                shard = self.pool.route(seq.rid, seq.page, need,
+                                        tier_hint=rec.get("shard"))
+                if shard is None:
+                    self.pool.cancel_pending(need)
+                    return
+                kw["shard"] = shard
+            self.paused.pop(0)
+            self._claims[seq.rid] = self._claims.get(seq.rid, 0) + need
+            self._live_seqs[seq.rid] = self._live_seqs.get(seq.rid, 0) + 1
+            allocs0 = self.pool.stats.allocs
+            sid = lm.backend.resume_seq(rec, **kw)
+            self._sid_rid[sid] = seq.rid
+            self._claim(seq.rid, self.pool.stats.allocs - allocs0)
+            seq.sid = sid
+            seq.table = lm.backend.table(sid)
+            if self.obs is not None:
+                self.obs.trace.event("engine.resume", rid=seq.rid, sid=sid,
+                                     traffic_class=seq.traffic_class,
+                                     tokens=seq.n_generated)
+            self.running.append(seq)
 
     def _commit_token(self, seq: SeqState, tok: int) -> int:
         """The single decode-token commit path: every driver (toy and LM,
@@ -430,8 +534,11 @@ class ServeEngine:
             while pending and self.submit(pending[0]):
                 pending.pop(0)
             made = self.step(now=float(step_i))
-            if not pending and not self.running and not len(self.scheduler):
+            if not pending and not self.running and not self.paused \
+                    and not len(self.scheduler):
                 break
+            if self.paused:
+                continue   # a paused decode resumes once headroom returns
             if made == 0 and not self.running:
                 # idle engine that still holds work: decide if it can ever
                 # make progress again

@@ -165,6 +165,45 @@ def test_lost_commit_flagged_at_stream_end():
     assert [v.code for v in check_history(evs)] == ["lost-commit"]
 
 
+def test_pause_between_steps_is_legal_in_every_interleaving():
+    """A drained pause (+ its resume barrier) slots anywhere between
+    committed steps; cross-shard merges cannot make it a violation."""
+    c0 = shard_chain(0, 1) + [Ev("pause", 0), Ev("resume", 0)] \
+        + [Ev("dispatch", 0, 1), Ev("sync", 0, 1), Ev("commit", 0, 1)]
+    c1 = shard_chain(1, 1)
+    n = 0
+    for il in interleavings(c0, c1):
+        n += 1
+        assert check_history(il) == []
+    assert n > 100
+
+
+@pytest.mark.parametrize("where", ["inflight", "pending"])
+def test_seeded_pause_inside_pipeline_caught_everywhere(where):
+    """pause before the flush barrier: with the step still in flight
+    (dispatch->sync window) or its write-back still deferred
+    (sync->commit window), block demotion races the device — the
+    detector's dedicated preempt-during-dispatch code, in EVERY
+    interleaving with an innocent shard."""
+    mut = list(shard_chain(0, 2))
+    if where == "inflight":
+        at = next(i for i, e in enumerate(mut)
+                  if e.kind == "sync" and e.step == 1)
+    else:
+        at = next(i for i, e in enumerate(mut)
+                  if e.kind == "commit" and e.step == 1)
+    mut.insert(at, Ev("pause", 0))
+    for il in interleavings(mut, shard_chain(1, 1)):
+        codes = {v.code for v in check_history(il)}
+        assert "preempt-during-dispatch" in codes
+        assert "barrier-missed" not in codes     # pause has its OWN code
+
+
+def test_resume_is_a_flush_barrier():
+    evs = [Ev("dispatch", 0, 0), Ev("sync", 0, 0), Ev("resume", 0)]
+    assert any(v.code == "barrier-missed" for v in check_history(evs))
+
+
 def test_issue_then_gather_round_ordering():
     good = [Ev("dispatch", 0, 0, round=0), Ev("dispatch", 1, 0, round=0),
             Ev("sync", 0, 0, round=0), Ev("sync", 1, 0, round=0),
@@ -259,6 +298,40 @@ def test_replay_require_pipeline_distinguishes_off_from_sequential():
         evs.append({"ts": ts, "ev": "engine.token", "rid": 0}); ts += 1
     report = analyze_trace(_lines(evs), require_pipeline=True)
     assert [v.code for v in report.violations] == ["no-lag"]
+
+
+def test_replay_accepts_legal_pause_resume_trace():
+    """The engine's preemption flow as it lands in a real trace: flush
+    drained the pipeline (commit emitted) BEFORE backend.pause, the
+    bitwise restore is a backend.resume barrier, decode continues."""
+    evs = _trace(steps=2)
+    ts = evs[-1]["ts"] + 1
+    evs.append({"ts": ts, "ev": "backend.pause", "shard": 0, "sid": 3})
+    evs.append({"ts": ts + 1, "ev": "backend.resume", "shard": 0})
+    evs.append({"ts": ts + 2, "ev": "backend.dispatch", "shard": 0,
+                "step": 2})
+    evs.append({"ts": ts + 3, "ev": "backend.decode", "shard": 0,
+                "step": 2, "dur_us": 1})
+    evs.append({"ts": ts + 4, "ev": "engine.token", "rid": 0})
+    evs.append({"ts": ts + 5, "ev": "backend.commit", "shard": 0,
+                "step": 2})
+    report = analyze_trace(_lines(evs), require_pipeline=True)
+    assert report.ok, [v.msg for v in report.violations]
+
+
+def test_replay_catches_pause_before_write_back_commit():
+    """Seeded violation: a backend.pause stamped inside the sync->commit
+    window — the demoted blocks would race the deferred KV write-back."""
+    evs = _trace(steps=3)
+    sync1 = next(e for e in evs if e["ev"] == "backend.decode"
+                 and e["step"] == 1)
+    evs.append({"ts": sync1["ts"] + 1, "ev": "backend.pause", "shard": 0})
+    report = analyze_trace(_lines(evs))
+    assert any(v.code == "preempt-during-dispatch"
+               for v in report.violations)
+    assert "flush barrier" in next(
+        v.msg for v in report.violations
+        if v.code == "preempt-during-dispatch")
 
 
 def test_replay_two_shard_trace():

@@ -25,6 +25,16 @@ Checks, all offline:
     same shard (tiers start empty, so promotion without a prior demotion
     is a bookkeeping bug), and a ``backend.decode`` follows a promotion
     (promoted pages re-enter decode through the staged mirror);
+  * traffic-class telemetry (``--require-classes``, the CI overloaded
+    ``--classes 3`` serve smoke's mode): the ``class.<name>.*`` counter
+    catalogue exists for >= 2 classes, per-class admission quotas were
+    respected in every ``sched.batch`` event (``classes[c] <=
+    quotas[c]`` whenever the quota is non-zero), overload actually
+    preempted at least one decode (``engine.pause`` present, preempt
+    counters > 0), and each rid's pause/resume events strictly
+    alternate starting with a pause (``backend.pause`` additionally
+    feeds the ``preempt-during-dispatch`` check under
+    ``--require-pipeline``);
   * split-phase decode-pipeline telemetry (``--require-pipeline``, the
     CI pipelined-serve smoke's mode): the
     ``engine.{dispatch,sync,commit}_ms`` phase histograms counted work
@@ -235,6 +245,82 @@ def check_tier_trace(lines: list, require_tiers: bool) -> list:
     return bad
 
 
+def check_class_snapshot(snap: dict) -> list:
+    """Per-traffic-class metric catalogue: counters for >= 2 classes,
+    non-negative, with at least one preemption counted (the overloaded
+    smoke must actually have triggered the pause path)."""
+    bad = []
+    counters = snap.get("counters", {})
+    classes = {n.split(".")[1] for n in counters
+               if n.startswith("class.") and n.count(".") >= 2}
+    if len(classes) < 2:
+        bad.append("snapshot: --require-classes but fewer than 2 "
+                   f"class.<name>.* counter groups found ({sorted(classes)})")
+    for c in sorted(classes):
+        for field in ("admit", "reject", "defer", "preempt", "scheduled"):
+            if f"class.{c}.{field}" not in counters:
+                bad.append(f"snapshot: class {c} missing counter {field}")
+    total_admit = sum(v for n, v in counters.items()
+                      if n.startswith("class.") and n.endswith(".admit"))
+    if total_admit <= 0:
+        bad.append("snapshot: --require-classes but no class admissions "
+                   "counted")
+    total_preempt = sum(v for n, v in counters.items()
+                        if n.startswith("class.")
+                        and n.endswith(".preempt"))
+    if total_preempt <= 0:
+        bad.append("snapshot: --require-classes but no preemption counted "
+                   "(overload never triggered the pause path — raise "
+                   "--requests or shrink --pool-blocks)")
+    return bad
+
+
+def check_class_trace(lines: list) -> list:
+    """Traffic-class trace ordering: per-batch quota respected, at least
+    one ``engine.pause``, and each rid's pause/resume events strictly
+    alternate starting with a pause (a resume without its pause, or two
+    pauses back to back, is lost-sequence bookkeeping)."""
+    bad = []
+    events = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue                 # check_trace already reported it
+    pauses = 0
+    state: dict = {}                 # rid -> "paused" | "running"
+    for ev in events:
+        name = ev.get("ev")
+        if name == "sched.batch":
+            classes = ev.get("classes", {})
+            quotas = ev.get("quotas", {})
+            for c, n in classes.items():
+                q = quotas.get(c, 0)
+                if q and n > q:
+                    bad.append(f"trace: sched.batch admitted {n} of class "
+                               f"{c} past its quota {q}")
+        elif name == "engine.pause":
+            pauses += 1
+            rid = ev.get("rid")
+            if state.get(rid) == "paused":
+                bad.append(f"trace: rid {rid} paused twice without a "
+                           "resume in between")
+            state[rid] = "paused"
+        elif name == "engine.resume":
+            rid = ev.get("rid")
+            if state.get(rid) != "paused":
+                bad.append(f"trace: rid {rid} resumed without a "
+                           "preceding pause")
+            state[rid] = "running"
+    if pauses == 0:
+        bad.append("trace: --require-classes but no engine.pause events "
+                   "(overload never preempted a decode)")
+    return bad
+
+
 def check_pipeline_snapshot(snap: dict) -> list:
     """Split-phase engine telemetry: the three phase histograms counted
     work and the pipeline-depth gauge exists."""
@@ -271,11 +357,14 @@ def check_pipeline_trace(lines: list) -> list:
 def main(argv: list) -> int:
     require_tiers = "--require-tiers" in argv
     require_pipeline = "--require-pipeline" in argv
+    require_classes = "--require-classes" in argv
     argv = [a for a in argv
-            if a not in ("--require-tiers", "--require-pipeline")]
+            if a not in ("--require-tiers", "--require-pipeline",
+                         "--require-classes")]
     if len(argv) != 2:
         print("usage: check_metrics.py <metrics.json> <trace.jsonl> "
-              "[--require-tiers] [--require-pipeline]", file=sys.stderr)
+              "[--require-tiers] [--require-pipeline] [--require-classes]",
+              file=sys.stderr)
         return 2
     snap_path, trace_path = argv
     failures = []
@@ -287,6 +376,8 @@ def main(argv: list) -> int:
     if snap is not None:
         failures.extend(check_snapshot(snap))
         failures.extend(check_tier_snapshot(snap, require_tiers))
+        if require_classes:
+            failures.extend(check_class_snapshot(snap))
         if require_pipeline:
             failures.extend(check_pipeline_snapshot(snap))
     try:
@@ -297,6 +388,8 @@ def main(argv: list) -> int:
     if lines is not None:
         failures.extend(check_trace(lines))
         failures.extend(check_tier_trace(lines, require_tiers))
+        if require_classes:
+            failures.extend(check_class_trace(lines))
         if require_pipeline:
             failures.extend(check_pipeline_trace(lines))
     for msg in failures:
